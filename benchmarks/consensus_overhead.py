@@ -1,0 +1,88 @@
+"""Consensus-round overhead microbench (the paper's technique at LM scale).
+
+Measures on the CPU debug mesh: local step time, consensus round time, the
+effect of int8 exchange compression, and the communication-volume ratio of
+consensus-every-H vs all-reduce-every-step (analytic).
+"""
+from __future__ import annotations
+
+import time
+
+import numpy as np
+
+from benchmarks.common import write_csv
+
+
+def run(steps: int = 6) -> list[dict]:
+    import jax
+    if len(jax.devices()) < 8:
+        print("consensus_overhead: needs 8 devices "
+              "(run under XLA_FLAGS=--xla_force_host_platform_device_count=8)"
+              " — reporting analytic numbers only")
+        mesh = None
+    else:
+        from repro.launch.mesh import make_debug_mesh
+        mesh = make_debug_mesh(multi_pod=True)
+
+    rows = []
+    from repro.configs import get_reduced_config
+    from repro.models import build_model
+    cfg = get_reduced_config("qwen3-4b")
+    model = build_model(cfg)
+    params_bytes = model.param_count() * 2  # bf16 wire
+
+    for h in (1, 4, 16):
+        # cross-pod bytes per step: consensus exchanges deg x params every H
+        deg = 1  # ring with J=2
+        consensus_bytes = deg * params_bytes / h
+        allreduce_bytes = 2 * params_bytes          # ring AR every step
+        rows.append({"mode": f"consensus_H{h}", "wire_bytes_per_step":
+                     int(consensus_bytes),
+                     "vs_allreduce": round(consensus_bytes
+                                           / allreduce_bytes, 4)})
+    rows.append({"mode": "allreduce_every_step",
+                 "wire_bytes_per_step": int(allreduce_bytes),
+                 "vs_allreduce": 1.0})
+
+    if mesh is not None:
+        import jax.numpy as jnp
+        from repro.core.penalty import PenaltyConfig
+        from repro.data import DataConfig, SyntheticTokens
+        from repro.optim import ConsensusConfig, ConsensusTrainer
+        from repro.optim.adamw import AdamWConfig
+        for compression in ("none", "int8"):
+            tr = ConsensusTrainer(
+                model, mesh, adamw=AdamWConfig(lr=1e-2),
+                consensus=ConsensusConfig(
+                    penalty=PenaltyConfig(scheme="nap", eta0=0.1),
+                    topology="ring", local_steps=4,
+                    compression=compression))
+            state = tr.init_state(jax.random.PRNGKey(0))
+            data = SyntheticTokens(DataConfig(
+                vocab=cfg.vocab, seq_len=32, batch_per_node=2, num_nodes=2))
+            train = jax.jit(tr.train_step)
+            cons = jax.jit(tr.consensus_step)
+            state, _ = train(state, data.batch(0))          # warm
+            state, _ = cons(state, data.batch(0, probe=True))
+            t0 = time.time()
+            for s in range(steps):
+                state, m = train(state, data.batch(s))
+            jax.block_until_ready(m["loss"])
+            t_local = (time.time() - t0) / steps
+            t0 = time.time()
+            for s in range(3):
+                state, cm = cons(state, data.batch(s, probe=True))
+            jax.block_until_ready(cm["r_max"])
+            t_cons = (time.time() - t0) / 3
+            rows.append({"mode": f"measured_{compression}",
+                         "wire_bytes_per_step": int(params_bytes),
+                         "vs_allreduce": round(t_cons / max(t_local, 1e-9),
+                                               3)})
+            print(f"consensus bench ({compression}): local "
+                  f"{t_local*1e3:.1f}ms round {t_cons*1e3:.1f}ms")
+    write_csv("consensus_overhead.csv", rows)
+    return rows
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,71 @@
+"""Roofline table from the dry-run artifacts (EXPERIMENTS.md §Roofline).
+
+Reads dryrun_results.json and renders, per (arch x shape x mesh):
+the three roofline terms, the dominant bottleneck, MODEL_FLOPS/HLO_FLOPs
+(useful-compute fraction), and the roofline fraction the cell achieves
+(compute term / total of all three ~ how compute-bound the artifact is).
+"""
+from __future__ import annotations
+
+import json
+import os
+
+from benchmarks.common import write_csv
+
+DEFAULT_PATH = os.path.join(os.path.dirname(__file__), "..",
+                            "dryrun_results.json")
+
+
+def run(path: str = DEFAULT_PATH) -> list[dict]:
+    if not os.path.exists(path):
+        print(f"roofline: no dry-run artifact at {path}; run "
+              f"`python -m repro.launch.dryrun` first")
+        return []
+    with open(path) as f:
+        recs = json.load(f)
+    rows = []
+    for r in recs:
+        if r.get("skipped"):
+            rows.append({"arch": r["arch"], "shape": r["shape"],
+                         "mesh": r["mesh"], "status": "SKIP",
+                         "dominant": "-", "compute_s": "-", "memory_s": "-",
+                         "collective_s": "-", "useful_frac": "-",
+                         "roofline_frac": "-", "bytes_per_dev_gb": "-"})
+            continue
+        if "error" in r:
+            rows.append({"arch": r["arch"], "shape": r["shape"],
+                         "mesh": r["mesh"], "status": "ERROR",
+                         "dominant": r["error"][:40], "compute_s": "-",
+                         "memory_s": "-", "collective_s": "-",
+                         "useful_frac": "-", "roofline_frac": "-",
+                         "bytes_per_dev_gb": "-"})
+            continue
+        rl = r["roofline"]
+        main = r.get("train") or r.get("prefill") or r.get("decode")
+        total = rl["compute_s"] + rl["memory_s"] + rl["collective_s"]
+        # fraction of step time that is irreducible compute at peak — the
+        # closer to 1, the closer the artifact is to the compute roofline
+        frac = rl["compute_s"] / total if total else 0.0
+        rows.append({
+            "arch": r["arch"], "shape": r["shape"], "mesh": r["mesh"],
+            "status": "OK", "dominant": rl["dominant"],
+            "compute_s": round(rl["compute_s"], 4),
+            "memory_s": round(rl["memory_s"], 4),
+            "collective_s": round(rl["collective_s"], 4),
+            "useful_frac": round(r.get("useful_flop_frac", 0.0), 3),
+            "roofline_frac": round(frac, 4),
+            "bytes_per_dev_gb": round(main["bytes_per_device_gb"], 2),
+        })
+    write_csv("roofline.csv", rows)
+    hdr = ("arch", "shape", "mesh", "status", "dominant", "compute_s",
+           "memory_s", "collective_s", "useful_frac", "roofline_frac",
+           "bytes_per_dev_gb")
+    widths = [24, 12, 8, 6, 11, 10, 10, 13, 11, 13, 16]
+    print("  ".join(h.ljust(w) for h, w in zip(hdr, widths)))
+    for row in rows:
+        print("  ".join(str(row[h]).ljust(w) for h, w in zip(hdr, widths)))
+    return rows
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,136 @@
+"""Benchmark driver: one harness per paper table/figure + system benches.
+
+Prints a ``name,value,derived`` CSV summary at the end. Full sweeps:
+``python -m benchmarks.run --full``.
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+import time
+
+
+def main(argv=None) -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--full", action="store_true",
+                    help="paper-scale sweeps (20 seeds etc.)")
+    ap.add_argument("--only", default="all",
+                    choices=["all", "fig2", "fig3", "hopkins", "roofline",
+                             "consensus", "lm_ablation"])
+    args = ap.parse_args(argv)
+    seeds = 20 if args.full else 3
+
+    summary = []
+
+    def record(name, value, derived=""):
+        summary.append((name, value, derived))
+
+    if args.only in ("all", "fig2"):
+        from benchmarks import fig2_synthetic
+        t0 = time.time()
+        rows = fig2_synthetic.run(seeds=seeds if args.full else 2,
+                                  sizes=(12, 16, 20) if args.full
+                                  else (12, 20))
+        by = {(r["nodes"], r["topology"], r["scheme"]): r for r in rows}
+        for j in sorted({r["nodes"] for r in rows}):
+            base = by.get((j, "complete", "fixed"))
+            vp = by.get((j, "complete", "vp"))
+            if base and vp:
+                sp = 100 * (base["iters_median"] - vp["iters_median"]) \
+                    / base["iters_median"]
+                record(f"fig2_J{j}_complete_vp_speedup_pct", round(sp, 1),
+                       f"baseline={base['iters_median']:.0f}it")
+        record("fig2_wall_s", round(time.time() - t0, 1))
+
+    if args.only in ("all", "fig3"):
+        from benchmarks import fig3_sfm
+        t0 = time.time()
+        rows = fig3_sfm.run(seeds=seeds if args.full else 2)
+        by = {(r["topology"], r["t_max"], r["scheme"]): r for r in rows}
+        b5 = by.get(("complete", 5, "fixed"))
+        n5 = by.get(("complete", 5, "nap"))
+        if b5 and n5:
+            sp = 100 * (b5["iters_median"] - n5["iters_median"]) \
+                / b5["iters_median"]
+            record("fig3_tmax5_nap_speedup_pct", round(sp, 1),
+                   "NAP accelerates where t_max-bound methods cannot")
+        record("fig3_wall_s", round(time.time() - t0, 1))
+
+    if args.only in ("all", "hopkins"):
+        from benchmarks import tab_hopkins
+        t0 = time.time()
+        rows = tab_hopkins.run(num_objects=20 if args.full else 6,
+                               seeds=3 if args.full else 2)
+        for r in rows:
+            if r["topology"] == "complete" and r["scheme"] in ("vp", "vp_ap"):
+                record(f"hopkins_complete_{r['scheme']}_speedup_pct",
+                       r["speedup_vs_fixed_pct"],
+                       "paper: vp=40.2 vp_ap=37.3")
+        record("hopkins_wall_s", round(time.time() - t0, 1))
+
+    if args.only in ("all", "roofline"):
+        from benchmarks import roofline
+        rows = roofline.run()
+        ok = [r for r in rows if r["status"] == "OK"]
+        if ok:
+            fracs = [r["roofline_frac"] for r in ok]
+            record("roofline_cells_ok", len(ok), f"of {len(rows)}")
+            record("roofline_frac_median",
+                   round(sorted(fracs)[len(fracs) // 2], 4))
+
+    if args.only in ("all", "consensus"):
+        # own subprocess: the ppca benches enable x64 globally, which the
+        # trainer jit must not inherit (and a crash must not eat the summary)
+        import os
+        import subprocess
+        env = dict(os.environ)
+        env.setdefault("XLA_FLAGS",
+                       "--xla_force_host_platform_device_count=8")
+        proc = subprocess.run(
+            [sys.executable, "-m", "benchmarks.consensus_overhead"],
+            capture_output=True, text=True, env=env, timeout=1800)
+        print(proc.stdout, end="")
+        if proc.returncode == 0:
+            import csv
+            path = os.path.join(os.path.dirname(__file__), "results",
+                                "consensus_overhead.csv")
+            if os.path.exists(path):
+                with open(path) as f:
+                    for r in csv.DictReader(f):
+                        if r["mode"] == "consensus_H16":
+                            record("consensus_H16_wire_vs_allreduce",
+                                   r["vs_allreduce"],
+                                   "cross-pod bytes ratio")
+        else:
+            record("consensus_bench", "FAILED",
+                   proc.stderr.strip().splitlines()[-1][:80]
+                   if proc.stderr.strip() else "no stderr")
+
+    if args.only in ("all", "lm_ablation"):
+        import os
+        import subprocess
+        env = dict(os.environ)
+        env.setdefault("XLA_FLAGS",
+                       "--xla_force_host_platform_device_count=8")
+        proc = subprocess.run(
+            [sys.executable, "-m", "benchmarks.lm_scheme_ablation"],
+            capture_output=True, text=True, env=env, timeout=1800)
+        print(proc.stdout, end="")
+        if proc.returncode == 0:
+            import csv
+            path = os.path.join(os.path.dirname(__file__), "results",
+                                "lm_scheme_ablation.csv")
+            if os.path.exists(path):
+                with open(path) as f:
+                    rows = list(csv.DictReader(f))
+                best = min(rows, key=lambda r: float(r["final_loss"]))
+                record("lm_ablation_best_scheme", best["scheme"],
+                       f"loss={best['final_loss']}")
+
+    print("\nname,value,derived")
+    for name, value, derived in summary:
+        print(f"{name},{value},{derived}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,24 @@
+"""End-to-end driver: train a (reduced) LM with consensus-ADMM across pods.
+
+Two simulated pods (8 fake CPU devices), ring topology, NAP penalties,
+checkpoint + resume, straggler monitoring — the full production loop at toy
+scale. On a real fleet only the mesh and config change.
+
+Run:  PYTHONPATH=src python examples/consensus_lm_train.py
+"""
+import os
+
+os.environ.setdefault("XLA_FLAGS",
+                      "--xla_force_host_platform_device_count=8")
+
+import sys  # noqa: E402
+
+sys.argv = [sys.argv[0], "--arch", "qwen3-4b", "--reduced",
+            "--steps", "20", "--scheme", "nap", "--topology", "ring",
+            "--local-steps", "4", "--ckpt-dir", "/tmp/repro_ckpt_example",
+            "--ckpt-every", "8"]
+
+from repro.launch.train import main  # noqa: E402
+
+if __name__ == "__main__":
+    raise SystemExit(main())

@@ -1,0 +1,41 @@
+"""Distributed structure-from-motion with D-PPCA + ADMM-NAP (paper §5.2).
+
+Five cameras on a turntable scene reach consensus on the 3D structure
+without ever pooling their measurements. Compares the fixed-penalty baseline
+against the paper's NAP schedule.
+
+Run:  PYTHONPATH=src python examples/dppca_sfm.py
+"""
+import jax
+
+jax.config.update("jax_enable_x64", True)
+
+import jax.numpy as jnp  # noqa: E402
+
+from repro.core import PenaltyConfig, build_graph  # noqa: E402
+from repro.ppca import (DPPCA, fit_svd, max_subspace_angle,  # noqa: E402
+                        turntable_sfm)
+
+
+def main():
+    sfm = turntable_sfm(num_cameras=5, frames=30, points=90, seed=0)
+    x = jnp.asarray(sfm.x_nodes)     # [5 cams, 2F_i rows, N points]
+    ref = fit_svd(jnp.asarray(sfm.measurements), 3)
+    print(f"scene: {sfm.structure.shape[0]} points, 30 frames, 5 cameras "
+          f"(transposed PPCA layout: consensus W == 3D structure)")
+
+    for topo in ("ring", "complete"):
+        graph = build_graph(topo, 5)
+        for scheme in ("fixed", "nap"):
+            eng = DPPCA(latent_dim=3, graph=graph,
+                        penalty_cfg=PenaltyConfig(scheme=scheme, eta0=10.0))
+            st = eng.init(jax.random.PRNGKey(0), x)
+            st, hist = eng.run(st, x, max_iters=400, rel_tol=1e-5,
+                               min_iters=10)
+            ang = float(max_subspace_angle(st.W, ref.W))
+            print(f"  {topo:9s} {scheme:6s}: {hist['iterations']:4d} iters, "
+                  f"structure angle vs centralized SVD = {ang:5.2f} deg")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,51 @@
+"""Quickstart: the paper's adaptive-penalty consensus ADMM in 60 lines.
+
+Solves a distributed least-squares problem on a ring of 8 nodes with each of
+the six penalty schedules and prints iterations-to-convergence — the paper's
+headline comparison, on a problem small enough to eyeball.
+
+Run:  PYTHONPATH=src python examples/quickstart.py
+"""
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+from repro.core import (ConsensusADMM, PenaltyConfig, SCHEMES, build_graph,
+                        consensus_error)
+
+
+def main():
+    J, d, n = 8, 5, 20
+    rng = np.random.default_rng(0)
+    A = rng.normal(size=(J, n, d)).astype(np.float32)
+    w_true = rng.normal(size=d).astype(np.float32)
+    b = A @ w_true + 0.05 * rng.normal(size=(J, n)).astype(np.float32)
+    w_star = np.linalg.lstsq(A.reshape(-1, d), b.reshape(-1), rcond=None)[0]
+
+    def objective(data, theta):
+        Ai, bi = data
+        return jnp.sum((Ai @ theta["w"] - bi) ** 2)
+
+    data = (jnp.asarray(A), jnp.asarray(b))
+    theta0 = {"w": jnp.asarray(rng.normal(size=(J, d)).astype(np.float32))}
+
+    print(f"{'scheme':10s} {'topology':10s} {'iters':>6s} {'max|w-w*|':>10s} "
+          f"{'consensus':>10s}")
+    for topo in ("complete", "ring"):
+        graph = build_graph(topo, J)
+        for scheme in SCHEMES:
+            engine = ConsensusADMM(
+                objective=objective,
+                penalty_cfg=PenaltyConfig(scheme=scheme, eta0=1.0),
+                graph=graph, inner_steps=30, inner_lr=1.0)
+            state = engine.init(theta0)
+            state, hist = engine.run(state, data, max_iters=400,
+                                     rel_tol=1e-8)
+            err = float(np.abs(np.asarray(state.theta["w"]) - w_star).max())
+            cons = float(consensus_error(state.theta))
+            print(f"{scheme:10s} {topo:10s} {hist['iterations']:6d} "
+                  f"{err:10.4f} {cons:10.5f}")
+
+
+if __name__ == "__main__":
+    main()

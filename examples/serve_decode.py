@@ -1,0 +1,12 @@
+"""Serving example: batched prefill + greedy decode on a reduced model.
+
+Run:  PYTHONPATH=src python examples/serve_decode.py [--arch rwkv6-7b]
+"""
+import sys
+
+from repro.launch.serve import main
+
+if __name__ == "__main__":
+    if len(sys.argv) == 1:
+        sys.argv += ["--arch", "qwen3-4b"]
+    raise SystemExit(main())

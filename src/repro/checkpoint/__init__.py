@@ -1,0 +1,4 @@
+from repro.checkpoint.checkpoint import (latest_steps, restore, save,
+                                         save_async, wait_pending)
+
+__all__ = ["latest_steps", "restore", "save", "save_async", "wait_pending"]

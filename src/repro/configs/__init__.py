@@ -1,0 +1,7 @@
+"""Architecture configs (one per assigned arch) + shape cells."""
+from repro.configs.base import (ARCH_IDS, SHAPES, ArchConfig, MoEConfig,
+                                ShapeCell, all_configs, cells, get_config,
+                                get_reduced_config)
+
+__all__ = ["ARCH_IDS", "SHAPES", "ArchConfig", "MoEConfig", "ShapeCell",
+           "all_configs", "cells", "get_config", "get_reduced_config"]

@@ -1,0 +1,186 @@
+"""Architecture + run configuration system.
+
+``ArchConfig`` describes a transformer-family model precisely enough to build
+it; one file per assigned architecture lives next to this module and registers
+itself via ``register``. ``SHAPES`` are the assigned input-shape cells; a
+(arch, shape) pair defines one dry-run/roofline cell.
+"""
+from __future__ import annotations
+
+import dataclasses
+import importlib
+from typing import Callable, Literal
+
+Family = Literal["dense", "moe", "audio", "hybrid", "ssm", "vlm"]
+
+
+@dataclasses.dataclass(frozen=True)
+class MoEConfig:
+    num_experts: int
+    top_k: int
+    expert_d_ff: int
+    # router
+    router_jitter: float = 0.0
+    capacity_factor: float = 1.25   # EP dispatch buffer headroom
+
+
+@dataclasses.dataclass(frozen=True)
+class ArchConfig:
+    """One architecture. Field semantics follow the assignment table."""
+
+    arch_id: str
+    family: Family
+    source: str                     # provenance tag from the assignment
+
+    n_layers: int
+    d_model: int
+    n_heads: int                    # query heads (0 for attn-free)
+    n_kv_heads: int                 # GQA KV heads
+    d_ff: int
+    vocab: int
+    head_dim: int = 0               # 0 => d_model // n_heads
+
+    # attention details
+    qkv_bias: bool = False
+    qk_norm: bool = False
+    rope_theta: float = 10_000.0
+    sliding_window: int = 0         # 0 => full attention
+
+    # extensions
+    moe: MoEConfig | None = None
+    ssm_state: int = 0              # hymba-style parallel SSM heads
+    rwkv: bool = False              # RWKV6 time-mix instead of attention
+    frontend: Literal["none", "audio_frames", "vision_patches"] = "none"
+
+    tie_embeddings: bool = False
+    norm_eps: float = 1e-5
+    dtype: str = "bfloat16"
+
+    def __post_init__(self):
+        if self.head_dim == 0 and self.n_heads:
+            object.__setattr__(self, "head_dim", self.d_model // self.n_heads)
+
+    # ---------------------------------------------------------------- sizes
+    @property
+    def q_dim(self) -> int:
+        return self.n_heads * self.head_dim
+
+    @property
+    def kv_dim(self) -> int:
+        return self.n_kv_heads * self.head_dim
+
+    @property
+    def sub_quadratic(self) -> bool:
+        """Can this arch run the long_500k cell? (SSM / hybrid / windowed)."""
+        return self.rwkv or self.ssm_state > 0 or self.sliding_window > 0
+
+    def param_count(self) -> int:
+        """Exact parameter count (embedding + L x block + final norm/head)."""
+        d, l = self.d_model, self.n_layers
+        emb = self.vocab * d
+        head = 0 if self.tie_embeddings else self.vocab * d
+        blk = 0
+        if self.rwkv:
+            # time-mix: r,k,v,g,o (d x d) + w lora + ln params (approx exact:
+            # receptance/key/value/gate/output + decay lora 2*(d*64)):
+            blk += 5 * d * d + 2 * d * 64 + 6 * d
+            blk += 2 * d * self.d_ff + d  # channel-mix: k (d,ff), v (ff,d), r
+            blk += d * d
+        else:
+            blk += d * self.q_dim + 2 * d * self.kv_dim + self.q_dim * d
+            if self.qkv_bias:
+                blk += self.q_dim + 2 * self.kv_dim
+            if self.ssm_state:  # hymba parallel SSM path
+                blk += 2 * d * self.q_dim + self.q_dim * d \
+                    + self.q_dim * self.ssm_state * 2 + self.q_dim
+            if self.moe is not None:
+                e = self.moe
+                blk += d * e.num_experts                       # router
+                blk += e.num_experts * 3 * d * e.expert_d_ff   # experts
+            else:
+                blk += 3 * d * self.d_ff                       # swiglu
+        blk += 2 * d                                            # 2 norms
+        return emb + head + l * blk + d
+
+    def active_param_count(self) -> int:
+        """Parameters touched per token (MoE: only routed experts)."""
+        if self.moe is None:
+            return self.param_count()
+        e = self.moe
+        total = self.param_count()
+        all_experts = self.n_layers * e.num_experts * 3 * self.d_model \
+            * e.expert_d_ff
+        active = self.n_layers * e.top_k * 3 * self.d_model * e.expert_d_ff
+        return total - all_experts + active
+
+
+@dataclasses.dataclass(frozen=True)
+class ShapeCell:
+    name: str
+    seq_len: int
+    global_batch: int
+    kind: Literal["train", "prefill", "decode"]
+
+
+SHAPES: dict[str, ShapeCell] = {
+    "train_4k": ShapeCell("train_4k", 4_096, 256, "train"),
+    "prefill_32k": ShapeCell("prefill_32k", 32_768, 32, "prefill"),
+    "decode_32k": ShapeCell("decode_32k", 32_768, 128, "decode"),
+    "long_500k": ShapeCell("long_500k", 524_288, 1, "decode"),
+}
+
+ARCH_IDS = (
+    "glm4-9b", "stablelm-3b", "qwen2-7b", "qwen3-4b", "moonshot-v1-16b-a3b",
+    "kimi-k2-1t-a32b", "musicgen-large", "hymba-1.5b", "rwkv6-7b",
+    "llava-next-mistral-7b",
+)
+
+_REGISTRY: dict[str, ArchConfig] = {}
+_REDUCED: dict[str, Callable[[], ArchConfig]] = {}
+
+
+def register(cfg: ArchConfig, reduced: Callable[[], ArchConfig]):
+    _REGISTRY[cfg.arch_id] = cfg
+    _REDUCED[cfg.arch_id] = reduced
+    return cfg
+
+
+def get_config(arch_id: str) -> ArchConfig:
+    _ensure_loaded()
+    if arch_id not in _REGISTRY:
+        raise KeyError(f"unknown arch {arch_id!r}; known: {sorted(_REGISTRY)}")
+    return _REGISTRY[arch_id]
+
+
+def get_reduced_config(arch_id: str) -> ArchConfig:
+    """Small same-family config for CPU smoke tests."""
+    _ensure_loaded()
+    return _REDUCED[arch_id]()
+
+
+def all_configs() -> dict[str, ArchConfig]:
+    _ensure_loaded()
+    return dict(_REGISTRY)
+
+
+_LOADED = False
+
+
+def _ensure_loaded():
+    global _LOADED
+    if _LOADED:
+        return
+    for arch in ARCH_IDS:
+        importlib.import_module(
+            f"repro.configs.{arch.replace('-', '_').replace('.', '_')}")
+    _LOADED = True
+
+
+def cells(include_skipped: bool = True):
+    """Yield every (arch, shape) assignment cell with its skip status."""
+    _ensure_loaded()
+    for arch_id in ARCH_IDS:
+        cfg = _REGISTRY[arch_id]
+        for shape in SHAPES.values():
+            skip = (shape.name == "long_500k" and not cfg.sub_quadratic)
+            yield cfg, shape, skip

@@ -1,0 +1,21 @@
+"""Core: the paper's consensus-ADMM engine with adaptive penalty schedules."""
+from repro.core.admm import ConsensusADMM, ConsensusState, consensus_error
+from repro.core.graph import (Graph, TOPOLOGIES, build_graph, chain_graph,
+                              cluster_graph, complete_graph, drop_node,
+                              expander_graph, ring_graph, star_graph,
+                              torus_graph)
+from repro.core.penalty import (SCHEMES, PenaltyConfig, PenaltyState,
+                                compute_tau, effective_eta,
+                                init_penalty_state, update_penalty)
+from repro.core.residuals import (Residuals, local_residuals, neighbor_mean,
+                                  node_eta)
+
+__all__ = [
+    "ConsensusADMM", "ConsensusState", "consensus_error",
+    "Graph", "TOPOLOGIES", "build_graph", "chain_graph", "cluster_graph",
+    "complete_graph", "drop_node", "expander_graph", "ring_graph",
+    "star_graph", "torus_graph",
+    "SCHEMES", "PenaltyConfig", "PenaltyState", "compute_tau",
+    "effective_eta", "init_penalty_state", "update_penalty",
+    "Residuals", "local_residuals", "neighbor_mean", "node_eta",
+]

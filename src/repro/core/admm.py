@@ -1,0 +1,254 @@
+"""Generic consensus-ADMM engine over pytrees (single-host, vmapped nodes).
+
+Solves  min_theta  sum_i f_i(theta_i)  s.t. theta_i = rho_ij, rho_ij = theta_j
+on a static graph, with any of the six penalty schedules of the paper.
+
+We use the standard fully-decentralized form (Forero et al. '11; Yoon &
+Pavlovic '12) in which the edge auxiliaries rho_ij are eliminated analytically
+(rho_ij = (theta_i + theta_j)/2) and each node keeps a single Lagrange
+multiplier lam_i. One outer iteration (paper Algorithm 1, with the PPCA
+specifics abstracted away) is:
+
+  1. theta_i^{t+1} = argmin_th  f_i(th) + 2 <lam_i, th>
+                       + sum_{j in B_i} eta_ij^t ||th - (theta_i^t+theta_j^t)/2||^2
+  2. broadcast theta_i^{t+1} to neighbors
+  3. lam_i^{t+1} = lam_i^t + 1/2 sum_j eta_ij^t (theta_i^{t+1} - theta_j^{t+1})
+  4. update eta_ij (and budget T_ij) per the configured scheme
+
+The argmin in (1) is delegated to a ``local_solver`` — closed-form for
+quadratic losses and for the PPCA M-step, K gradient steps otherwise.
+
+This dense engine is the reproduction/validation path (all J nodes in one
+array, leading axis = node). The sharded multi-pod trainer in
+``repro.optim.consensus`` reuses the same penalty/residual modules with the
+node axis mapped onto the device mesh.
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+from typing import Any, Callable, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import residuals as res_lib
+from repro.core.graph import Graph
+from repro.core.penalty import (PenaltyConfig, PenaltyState,
+                                init_penalty_state, update_penalty)
+
+PyTree = Any
+# f(data_i, theta_i) -> scalar local objective for one node (unbatched).
+ObjectiveFn = Callable[[PyTree, PyTree], jax.Array]
+# local_solver(data_i, theta_i, lam_i, eta_row, midpoint_i) -> new theta_i,
+# where midpoint_i is the pytree of eta-weighted neighbor midpoint pulls.
+LocalSolver = Callable[..., PyTree]
+
+
+class ConsensusState(NamedTuple):
+    theta: PyTree          # leaves [J, ...] — per-node parameter estimates
+    lam: PyTree            # leaves [J, ...] — per-node multipliers lam_i
+    theta_bar: PyTree      # leaves [J, ...] — previous neighbor average
+    penalty: PenaltyState
+    t: jax.Array           # [] int32
+
+
+@dataclasses.dataclass(frozen=True, eq=False)  # identity hash: jit-cache key
+class ConsensusADMM:
+    """Configurable consensus-ADMM driver.
+
+    Attributes:
+      objective: local objective f_i (same fn for all nodes; data differs).
+      penalty_cfg: which of the six schedules to run.
+      graph: static communication graph.
+      inner_steps / inner_lr: gradient inner solver settings (used when no
+        closed-form ``local_solver`` is supplied).
+      probe_midpoint: evaluate kappa at rho_ij=(theta_i+theta_j)/2 (the
+        paper's locality remark in §3.2) instead of at theta_j directly.
+    """
+
+    objective: ObjectiveFn
+    penalty_cfg: PenaltyConfig
+    graph: Graph
+    inner_steps: int = 10
+    inner_lr: float = 0.05
+    probe_midpoint: bool = False
+    local_solver: LocalSolver | None = None
+
+    # -- initialization --------------------------------------------------------
+    def init(self, theta0: PyTree) -> ConsensusState:
+        """theta0: pytree with leading node axis [J, ...] on every leaf."""
+        j = self.graph.num_nodes
+        leaves = jax.tree_util.tree_leaves(theta0)
+        assert all(l.shape[0] == j for l in leaves), (
+            f"every leaf must have leading node axis {j}")
+        zeros = jax.tree_util.tree_map(jnp.zeros_like, theta0)
+        adj = jnp.asarray(self.graph.adj)
+        bar = res_lib.neighbor_mean(theta0, adj)
+        return ConsensusState(
+            theta=theta0, lam=zeros, theta_bar=bar,
+            penalty=init_penalty_state(self.penalty_cfg, j),
+            t=jnp.zeros((), jnp.int32))
+
+    # -- inner solvers ----------------------------------------------------------
+    def _solve_gradient(self, data, theta, lam, eta, adj):
+        """Vmapped K-step gradient descent on the augmented objective."""
+        adj_f = adj.astype(jnp.float32)
+        w = eta * adj_f                       # [J, J]
+        wsum = w.sum(axis=1)                  # [J]
+
+        # Precompute the eta-weighted neighbor pull:
+        #   sum_j eta_ij (theta_i^t + theta_j^t)/2   (constant during solve)
+        def pull_leaf(leaf):
+            flat = leaf.reshape(leaf.shape[0], -1)
+            nbr = w @ flat                                  # sum_j eta_ij th_j
+            own = wsum[:, None] * flat                      # sum_j eta_ij th_i
+            return (0.5 * (nbr + own)).reshape(leaf.shape)
+
+        pull = jax.tree_util.tree_map(pull_leaf, theta)
+
+        def one_node(data_i, th0, lam_i, pull_i, wsum_i):
+            def aug(th):
+                lin = sum(jnp.vdot(a, b).real for a, b in zip(
+                    jax.tree_util.tree_leaves(lam_i),
+                    jax.tree_util.tree_leaves(th)))
+                # sum_j eta ||th - mid||^2
+                #   = wsum ||th||^2 - 2 <th, pull> + const
+                quad = 0.0
+                for th_l, p_l in zip(jax.tree_util.tree_leaves(th),
+                                     jax.tree_util.tree_leaves(pull_i)):
+                    quad = quad + wsum_i * jnp.sum(jnp.square(th_l)) \
+                        - 2.0 * jnp.sum(th_l * p_l)
+                return self.objective(data_i, th) + 2.0 * lin + quad
+
+            g = jax.grad(aug)
+
+            def step(th, _):
+                gr = g(th)
+                # steepest descent with exact line search along -g via an
+                # hvp:  step* = <g,g> / <g, H g>  — exact for quadratic
+                # augmented objectives, parameter-free, topology-robust.
+                _, hg = jax.jvp(g, (th,), (gr,))
+                gg = sum(jnp.vdot(a, a).real
+                         for a in jax.tree_util.tree_leaves(gr))
+                ghg = sum(jnp.vdot(a, b).real for a, b in zip(
+                    jax.tree_util.tree_leaves(gr),
+                    jax.tree_util.tree_leaves(hg)))
+                # the quadratic consensus term guarantees curvature
+                # >= 2*wsum; fall back to it if f_i is locally concave.
+                safe = jnp.maximum(ghg, 2.0 * wsum_i * gg + 1e-12)
+                lr = self.inner_lr * gg / (safe + 1e-30)
+                return jax.tree_util.tree_map(
+                    lambda a, b: a - lr * b, th, gr), None
+
+            th, _ = jax.lax.scan(step, th0, None, length=self.inner_steps)
+            return th
+
+        return jax.vmap(one_node)(data, theta, lam, pull, wsum)
+
+    # -- one outer iteration ----------------------------------------------------
+    @partial(jax.jit, static_argnums=0)
+    def step(self, state: ConsensusState, data: PyTree) -> tuple[
+            ConsensusState, dict]:
+        """data: pytree with leading node axis [J, ...] (local observations)."""
+        g = self.graph
+        adj = jnp.asarray(g.adj)
+        eta = state.penalty.eta
+
+        # (1) local argmin
+        if self.local_solver is not None:
+            theta_new = self.local_solver(data, state.theta, state.lam, eta,
+                                          adj)
+        else:
+            theta_new = self._solve_gradient(data, state.theta, state.lam,
+                                             eta, adj)
+
+        # (2)+(3) neighbor exchange and dual update:
+        #   lam_i += 1/2 sum_j eta_ij (theta_i - theta_j)
+        # using the SYMMETRIZED penalty — directed eta would break the
+        # sum_i lam_i = 0 invariant and bias the fixed point (DESIGN.md §7).
+        w = 0.5 * (eta + eta.T) * adj.astype(eta.dtype)
+        wsum = w.sum(axis=1)
+
+        def dual_leaf(lam_leaf, th_leaf):
+            flat = th_leaf.reshape(th_leaf.shape[0], -1)
+            diff = wsum[:, None] * flat - w @ flat
+            return lam_leaf + 0.5 * diff.reshape(th_leaf.shape).astype(
+                lam_leaf.dtype)
+
+        lam_new = jax.tree_util.tree_map(dual_leaf, state.lam, theta_new)
+
+        # (eq. 5) local residuals
+        eta_node = res_lib.node_eta(eta, adj)
+        rr = res_lib.local_residuals(theta_new, state.theta_bar, adj, eta_node)
+
+        # objective probes for AP/NAP-family schedules
+        pcfg = self.penalty_cfg
+        if pcfg.uses_objective_probes:
+            f_self = jax.vmap(self.objective)(data, theta_new)
+
+            def probe(i_data, th_i, th_all):
+                def at_j(th_j):
+                    pt = jax.tree_util.tree_map(
+                        lambda a, b: 0.5 * (a + b), th_i, th_j) \
+                        if self.probe_midpoint else th_j
+                    return self.objective(i_data, pt)
+                return jax.vmap(at_j)(th_all)
+
+            f_nbr = jax.vmap(probe, in_axes=(0, 0, None))(
+                data, theta_new, theta_new)
+        else:
+            f_self = jax.vmap(self.objective)(data, theta_new)
+            f_nbr = None
+
+        penalty_new = update_penalty(
+            pcfg, state.penalty, adj=adj, f_self=f_self, f_nbr=f_nbr,
+            r_norm=rr.r_norm, s_norm=rr.s_norm)
+
+        new_state = ConsensusState(theta=theta_new, lam=lam_new,
+                                   theta_bar=rr.theta_bar,
+                                   penalty=penalty_new, t=state.t + 1)
+        metrics = {
+            "objective": f_self.sum(),
+            "r_norm": rr.r_norm,
+            "s_norm": rr.s_norm,
+            "eta_mean": res_lib.node_eta(penalty_new.eta, adj).mean(),
+            "eta_min": jnp.where(adj, penalty_new.eta, jnp.inf).min(),
+            "eta_max": jnp.where(adj, penalty_new.eta, -jnp.inf).max(),
+        }
+        return new_state, metrics
+
+    # -- convergence-driven run -------------------------------------------------
+    def run(self, state: ConsensusState, data: PyTree, *, max_iters: int,
+            rel_tol: float = 1e-3) -> tuple[ConsensusState, dict]:
+        """Python-loop driver with the paper's relative-change criterion (§5).
+
+        Returns final state and a history dict (objective trace, iters).
+        """
+        hist = {"objective": [], "r_norm": [], "eta_mean": []}
+        prev_obj = None
+        iters = max_iters
+        for it in range(max_iters):
+            state, m = self.step(state, data)
+            obj = float(m["objective"])
+            hist["objective"].append(obj)
+            hist["r_norm"].append(float(jnp.max(m["r_norm"])))
+            hist["eta_mean"].append(float(m["eta_mean"]))
+            if prev_obj is not None:
+                rel = abs(obj - prev_obj) / (abs(prev_obj) + 1e-12)
+                if rel < rel_tol:
+                    iters = it + 1
+                    break
+            prev_obj = obj
+        hist["iterations"] = iters
+        return state, hist
+
+
+def consensus_error(theta: PyTree) -> jax.Array:
+    """Max pairwise L2 disagreement across nodes — a convergence diagnostic."""
+    errs = []
+    for leaf in jax.tree_util.tree_leaves(theta):
+        flat = leaf.reshape(leaf.shape[0], -1).astype(jnp.float32)
+        mean = flat.mean(axis=0, keepdims=True)
+        errs.append(jnp.linalg.norm(flat - mean, axis=1).max())
+    return jnp.stack(errs).max()

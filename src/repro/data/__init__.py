@@ -1,0 +1,3 @@
+from repro.data.synthetic import DataConfig, Prefetcher, SyntheticTokens
+
+__all__ = ["DataConfig", "Prefetcher", "SyntheticTokens"]

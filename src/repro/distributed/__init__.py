@@ -1,0 +1,7 @@
+from repro.distributed.sharding import (current_mesh, default_rules,
+                                        logical_to_spec, named_sharding,
+                                        shard, spec_tree_to_shardings,
+                                        use_mesh)
+
+__all__ = ["current_mesh", "default_rules", "logical_to_spec",
+           "named_sharding", "shard", "spec_tree_to_shardings", "use_mesh"]

@@ -1,0 +1,4 @@
+"""Pallas TPU kernels (validated in interpret mode on CPU) + oracles."""
+from repro.kernels import ops, ref
+
+__all__ = ["ops", "ref"]

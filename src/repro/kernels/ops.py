@@ -1,0 +1,50 @@
+"""Jit'd public wrappers for the Pallas kernels.
+
+``interpret`` defaults to True in this CPU container (the kernels TARGET TPU;
+interpret mode executes the kernel body in Python for validation). On real
+TPU runtimes set ``repro.kernels.ops.INTERPRET = False`` (or pass through).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import consensus_update as _cu
+from repro.kernels import flash_attention as _fa
+from repro.kernels import rwkv6_scan as _rw
+
+INTERPRET = True
+
+
+def flash_attention(q, k, v, *, causal: bool = True, window: int = 0,
+                    block_q: int = 128, block_k: int = 128):
+    """Model-layout wrapper: q [B,S,H,hd], k/v [B,S,K,hd] -> [B,S,H,hd]."""
+    qt = jnp.swapaxes(q, 1, 2)
+    kt = jnp.swapaxes(k, 1, 2)
+    vt = jnp.swapaxes(v, 1, 2)
+    out = _fa.flash_attention(qt, kt, vt, causal=causal, window=window,
+                              block_q=block_q, block_k=block_k,
+                              interpret=INTERPRET)
+    return jnp.swapaxes(out, 1, 2)
+
+
+def flash_attention_hmajor(q, k, v, **kw):
+    """Head-major passthrough: q [B,H,S,hd]."""
+    return _fa.flash_attention(q, k, v, interpret=INTERPRET, **kw)
+
+
+def rwkv6_scan(r, k, v, w, u, s0, *, chunk: int = 32):
+    """Model-layout wrapper: r/k/v/w [B,S,H,hd] (w = decay in (0,1))."""
+    rt, kt, vt = (jnp.swapaxes(t, 1, 2) for t in (r, k, v))
+    log_w = jnp.log(jnp.maximum(jnp.swapaxes(w, 1, 2), 1e-38))
+    y, s = _rw.rwkv6_scan(rt, kt, vt, log_w, u, s0, chunk=chunk,
+                          interpret=INTERPRET)
+    return jnp.swapaxes(y, 1, 2), s
+
+
+def consensus_update(theta, lam, nbr_avg, theta_bar, theta_bar_prev, *,
+                     eta_sum, eta_node, step_size, block_size: int = 65536):
+    return _cu.consensus_update(theta, lam, nbr_avg, theta_bar,
+                                theta_bar_prev, eta_sum=eta_sum,
+                                eta_node=eta_node, step_size=step_size,
+                                block_size=block_size, interpret=INTERPRET)

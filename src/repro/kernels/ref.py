@@ -1,0 +1,70 @@
+"""Pure-jnp oracles for every Pallas kernel (the allclose ground truth)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+NEG_INF = -1e30
+
+
+def flash_attention_ref(q, k, v, *, causal: bool = True,
+                        window: int = 0) -> jax.Array:
+    """q,k,v: [B, H, S, hd] (head-major layout the kernel uses)."""
+    b, h, s, hd = q.shape
+    scale = 1.0 / jnp.sqrt(jnp.asarray(hd, jnp.float32))
+    logits = jnp.einsum("bhqd,bhkd->bhqk", q, k).astype(jnp.float32) * scale
+    qpos = jnp.arange(s)[:, None]
+    kpos = jnp.arange(s)[None, :]
+    mask = jnp.ones((s, s), bool)
+    if causal:
+        mask &= kpos <= qpos
+    if window > 0:
+        mask &= kpos > qpos - window
+    logits = jnp.where(mask[None, None], logits, NEG_INF)
+    probs = jax.nn.softmax(logits, axis=-1).astype(q.dtype)
+    return jnp.einsum("bhqk,bhkd->bhqd", probs, v)
+
+
+def rwkv6_scan_ref(r, k, v, log_w, u, s0):
+    """WKV6 recurrence oracle.
+
+    r,k,v: [B, H, T, hd]; log_w: [B, H, T, hd] (log decay, <= 0);
+    u: [H, hd]; s0: [B, H, hd, hd] (key x value).
+    Returns (y [B, H, T, hd], s_final).
+    """
+    w = jnp.exp(log_w.astype(jnp.float32))
+
+    def step(s, inp):
+        rt, kt, vt, wt = inp   # [B, H, hd]
+        kv = kt[..., :, None] * vt[..., None, :]
+        y = jnp.einsum("bhk,bhkv->bhv", rt.astype(jnp.float32),
+                       s + u[None, :, :, None] * kv)
+        s = wt[..., None] * s + kv
+        return s, y
+
+    xs = tuple(jnp.moveaxis(t, 2, 0).astype(jnp.float32)
+               for t in (r, k, v, w))
+    s_last, ys = jax.lax.scan(step, s0.astype(jnp.float32), xs)
+    return jnp.moveaxis(ys, 0, 2).astype(r.dtype), s_last
+
+
+def consensus_update_ref(theta, lam, nbr_avg, theta_bar, theta_bar_prev,
+                         *, eta_sum, eta_node, step_size):
+    """Fused consensus round oracle (flat vectors).
+
+    theta_new = theta - step * (2 lam + eta_sum (theta - nbr_avg))
+    lam_new   = lam + 0.5 eta_sum (theta_new - nbr_avg)
+    r_sq      = sum (theta_new - theta_bar)^2
+    s_sq      = eta_node^2 sum (theta_bar - theta_bar_prev)^2
+    """
+    theta32 = theta.astype(jnp.float32)
+    lam32 = lam.astype(jnp.float32)
+    nbr32 = nbr_avg.astype(jnp.float32)
+    theta_new = theta32 - step_size * (2.0 * lam32
+                                       + eta_sum * (theta32 - nbr32))
+    lam_new = lam32 + 0.5 * eta_sum * (theta_new - nbr32)
+    r_sq = jnp.sum((theta_new - theta_bar.astype(jnp.float32)) ** 2)
+    diff = theta_bar.astype(jnp.float32) - theta_bar_prev.astype(jnp.float32)
+    s_sq = (eta_node ** 2) * jnp.sum(diff ** 2)
+    return (theta_new.astype(theta.dtype), lam_new.astype(lam.dtype),
+            r_sq, s_sq)

@@ -1,0 +1,400 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+# The two lines above MUST run before any other import (jax locks the device
+# count at first init). Everything below may now import jax.
+
+import argparse
+import json
+import re
+import sys
+import time
+import traceback
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.configs import SHAPES, cells, get_config
+from repro.configs.base import ArchConfig, ShapeCell
+from repro.core.penalty import PenaltyConfig
+from repro.distributed import sharding as shd
+from repro.launch.mesh import (HBM_BW, ICI_BW_PER_LINK, PEAK_FLOPS_BF16,
+                               make_production_mesh)
+from repro.launch.steps import decode_state_specs, make_serve_fns, \
+    make_train_fns
+from repro.models import (build_model, arch_rules, input_specs,
+                          input_spec_shardings)
+from repro.models.model import Model
+from repro.optim import ConsensusConfig, ConsensusTrainer
+from repro.optim.adamw import AdamWConfig
+
+# match only collective op APPLICATIONS (`... = shape all-reduce(...)`),
+# not operand references (`%all-reduce.12`) or fusions that consume them
+_COLL_RE = re.compile(
+    r"(?<!%)\b(all-gather|all-reduce|reduce-scatter|all-to-all|"
+    r"collective-permute)(?:-start)?(?:\.\d+)?\(")
+_SHAPE_RE = re.compile(r"\b([a-z0-9]+)\[([0-9,]*)\]")
+_DTYPE_BYTES = {
+    "f64": 8, "f32": 4, "bf16": 2, "f16": 2, "f8e4m3fn": 1, "f8e5m2": 1,
+    "s64": 8, "u64": 8, "s32": 4, "u32": 4, "s16": 2, "u16": 2,
+    "s8": 1, "u8": 1, "pred": 1,
+}
+
+
+def _shape_bytes(dtype: str, dims: str) -> int:
+    if dtype not in _DTYPE_BYTES:
+        return 0
+    n = 1
+    if dims.strip():
+        for d in dims.split(","):
+            n *= int(d)
+    return n * _DTYPE_BYTES[dtype]
+
+
+def collective_bytes(hlo_text: str) -> dict:
+    """Sum result-shape bytes of every collective op in post-SPMD HLO.
+
+    all-reduce counts 2x (ring = reduce-scatter + all-gather on the wire).
+    Returns totals per op kind plus the weighted 'wire' total.
+    """
+    totals: dict[str, int] = {}
+    wire = 0
+    for line in hlo_text.splitlines():
+        m = _COLL_RE.search(line)
+        if not m or "=" not in line:
+            continue
+        # result shapes appear between '=' and the op name
+        lhs = line.split("=", 1)[1]
+        op_pos = lhs.find(m.group(1))
+        result_part = lhs[:op_pos] if op_pos >= 0 else lhs
+        nbytes = sum(_shape_bytes(d, s)
+                     for d, s in _SHAPE_RE.findall(result_part))
+        kind = m.group(1)
+        totals[kind] = totals.get(kind, 0) + nbytes
+        wire += nbytes * (2 if kind == "all-reduce" else 1)
+    totals["wire_total"] = wire
+    return totals
+
+
+def roofline_terms(flops: float, hbm_bytes: float, coll_bytes: float,
+                   chips: int) -> dict:
+    """Three-term roofline (seconds). cost_analysis is per-device already."""
+    compute_s = flops / PEAK_FLOPS_BF16
+    memory_s = hbm_bytes / HBM_BW
+    # v5e: 4 ICI links per chip usable; bytes here are per-device program
+    coll_s = coll_bytes / (ICI_BW_PER_LINK)
+    dominant = max(("compute", compute_s), ("memory", memory_s),
+                   ("collective", coll_s), key=lambda kv: kv[1])[0]
+    return {"compute_s": compute_s, "memory_s": memory_s,
+            "collective_s": coll_s, "dominant": dominant}
+
+
+def _cost_dict(compiled) -> dict:
+    ca = compiled.cost_analysis()
+    if isinstance(ca, (list, tuple)):
+        ca = ca[0]
+    return dict(ca) if ca else {}
+
+
+def _mem_dict(compiled) -> dict:
+    ma = compiled.memory_analysis()
+    out = {}
+    for attr in ("argument_size_in_bytes", "output_size_in_bytes",
+                 "temp_size_in_bytes", "generated_code_size_in_bytes",
+                 "alias_size_in_bytes"):
+        out[attr] = int(getattr(ma, attr, 0) or 0)
+    out["total_hbm_bytes"] = (out["argument_size_in_bytes"]
+                              + out["output_size_in_bytes"]
+                              + out["temp_size_in_bytes"]
+                              - out.get("alias_size_in_bytes", 0))
+    return out
+
+
+def model_flops(model: Model, cell: ShapeCell) -> float:
+    """6 N D (dense) / 6 N_active D — the useful-FLOPs yardstick."""
+    n = model.active_param_count()
+    if cell.kind == "train":
+        tokens = cell.global_batch * cell.seq_len
+        return 6.0 * n * tokens
+    if cell.kind == "prefill":
+        tokens = cell.global_batch * cell.seq_len
+        return 2.0 * n * tokens
+    return 2.0 * n * cell.global_batch          # decode: one token per seq
+
+
+# §Perf knobs consumed here (benchmarks/perf_iter.py sets them per variant)
+KNOBS = {
+    "grad_rs": False,        # reduce-scatter grads to param shards
+    "compression": "none",   # consensus exchange quantization
+    "probe_frac": 1,         # probe-batch reduction for the consensus round
+}
+
+
+def _compile_step(cfg: ArchConfig, cell: ShapeCell, mesh, *,
+                  consensus: bool, which: str = "main"):
+    """Lower+compile the step function for a config variant.
+
+    which: 'main' (train/prefill/decode per cell.kind) or 'consensus'.
+    """
+    model = build_model(cfg)
+    rules = arch_rules(cfg, mesh)
+    in_specs = input_specs(cfg, cell)
+    in_shard = input_spec_shardings(cfg, cell, mesh)
+
+    if cell.kind == "train":
+        acfg = AdamWConfig(
+            factored=cfg.moe is not None,
+            moment_dtype=jnp.bfloat16 if cfg.moe is not None
+            else jnp.float32)
+        if consensus:
+            trainer = ConsensusTrainer(
+                model, mesh, adamw=acfg,
+                consensus=ConsensusConfig(
+                    penalty=PenaltyConfig(scheme="nap", eta0=0.1),
+                    topology="ring", local_steps=8,
+                    compression=KNOBS["compression"],
+                    grad_rs=KNOBS["grad_rs"]))
+            state = trainer.abstract_state()
+            state_sh = trainer.state_shardings()
+            j = trainer.num_nodes
+            batch = {k: jax.ShapeDtypeStruct(
+                (j, v.shape[0] // j) + v.shape[1:], v.dtype)
+                for k, v in in_specs.items()}
+            batch_sh = {k: NamedSharding(mesh, P("pod", "data", *([None] * (
+                len(batch[k].shape) - 2)))) for k in batch}
+            if which == "consensus" and KNOBS["probe_frac"] > 1:
+                pf = KNOBS["probe_frac"]
+                batch = {k: jax.ShapeDtypeStruct(
+                    (v.shape[0], max(1, v.shape[1] // pf)) + v.shape[2:],
+                    v.dtype) for k, v in batch.items()}
+            fn = trainer.consensus_step if which == "consensus" \
+                else trainer.train_step
+            step = jax.jit(fn, in_shardings=(state_sh, batch_sh),
+                           out_shardings=(state_sh, None))
+            return step.lower(state, batch).compile()
+        _, step_fn, abstract_state, state_shardings = make_train_fns(
+            model, mesh, acfg, grad_rs=KNOBS["grad_rs"])
+        state = abstract_state()
+        state_sh = state_shardings()
+        step = jax.jit(step_fn, in_shardings=(state_sh, in_shard),
+                       out_shardings=(state_sh, None))
+        return step.lower(state, in_specs).compile()
+
+    with shd.use_mesh(mesh, rules):
+        pspec = model.param_specs()
+    params = model.abstract_params()
+    params_sh = jax.tree_util.tree_map(
+        lambda s: NamedSharding(mesh, s), pspec,
+        is_leaf=lambda s: isinstance(s, P))
+    if cell.kind == "prefill":
+        prefill_fn, _ = make_serve_fns(model, mesh, cell)
+        fn = jax.jit(prefill_fn, in_shardings=(params_sh, in_shard))
+        return fn.lower(params, in_specs).compile()
+    _, decode_fn = make_serve_fns(model, mesh, cell)
+    dstate, dstate_sh = decode_state_specs(cfg, mesh, cell.global_batch,
+                                           cell.seq_len)
+    fn = jax.jit(decode_fn,
+                 in_shardings=(params_sh, dstate_sh, in_shard),
+                 out_shardings=(None, dstate_sh))
+    return fn.lower(params, dstate, in_specs).compile()
+
+
+_NUMERIC_KEYS = ("flops_per_device", "hbm_bytes")
+
+
+def _corrected_record(cfg: ArchConfig, cell: ShapeCell, mesh, *,
+                      consensus: bool, which: str = "main") -> dict:
+    """Trip-count-corrected cost record.
+
+    ``cost_analysis``/HLO text count a while-loop body ONCE regardless of
+    trip count, so the layer scan (and any per-timestep scan) hides FLOPs.
+    We difference auxiliary 1- and 2-layer lowers (and time-unroll 1 vs 2 for
+    SSM/RWKV time scans) to recover per-layer / per-step costs, then
+    extrapolate:  total = f_main + (L-1)*layer + L*(T-1)*time.
+    Memory analysis comes from the real (scan) artifact — buffer reuse in the
+    loop is genuine, so no extrapolation there.
+    """
+    import dataclasses as dc
+    from repro.models import transformer as tfm
+    from repro.models import rwkv6 as rwkvm
+    from repro.models import ssm as ssmm
+
+    main = _record(_compile_step(cfg, cell, mesh, consensus=consensus,
+                                 which=which))
+    has_time_scan = (cfg.rwkv or cfg.ssm_state > 0) and cell.kind != "decode"
+
+    cfg1 = dc.replace(cfg, n_layers=1)
+    cfg2 = dc.replace(cfg, n_layers=2)
+    tfm.SCAN_UNROLL = 2          # fully unroll the 2-layer stack
+    try:
+        f1 = _record(_compile_step(cfg1, cell, mesh, consensus=consensus,
+                                   which=which))
+        f2 = _record(_compile_step(cfg2, cell, mesh, consensus=consensus,
+                                   which=which))
+        if has_time_scan:
+            rwkvm.TIME_UNROLL = 2
+            ssmm.TIME_UNROLL = 2
+            ft = _record(_compile_step(cfg1, cell, mesh,
+                                       consensus=consensus, which=which))
+            rwkvm.TIME_UNROLL = 1
+            ssmm.TIME_UNROLL = 1
+        else:
+            ft = None
+    finally:
+        tfm.SCAN_UNROLL = 1
+        rwkvm.TIME_UNROLL = 1
+        ssmm.TIME_UNROLL = 1
+
+    l = cfg.n_layers
+    t_steps = cell.seq_len if has_time_scan else 1
+    if has_time_scan and cfg.rwkv and rwkvm.TIME_CHUNK > 0:
+        t_steps = max(1, cell.seq_len // rwkvm.TIME_CHUNK)
+    out = dict(main)
+    corrected = {}
+    for key in _NUMERIC_KEYS + ("wire_total",):
+        get = (lambda r, k=key: r["collectives"]["wire_total"]
+               if k == "wire_total" else r[k])
+        time_body = max(get(ft) - get(f1), 0.0) if ft is not None else 0.0
+        if key == "wire_total":
+            # verified via HLO inspection: the per-timestep scan bodies are
+            # collective-free (identical collective sets at chunk=0 vs 64),
+            # so any unroll-diff delta is layout noise — extrapolate
+            # collectives over LAYERS only.
+            time_body = 0.0
+        layer_body = max(get(f2) - get(f1) - time_body, 0.0)
+        # main counts one layer body once (incl. one time body)
+        total = get(main) + (l - 1) * (layer_body + time_body) \
+            + l * (t_steps - 1) * time_body
+        corrected[key] = total
+    out["flops_per_device"] = corrected["flops_per_device"]
+    out["hbm_bytes"] = corrected["hbm_bytes"]
+    out["collectives"] = dict(main["collectives"])
+    out["collectives"]["wire_total"] = corrected["wire_total"]
+    out["uncorrected"] = {k: main[k] for k in _NUMERIC_KEYS}
+    out["uncorrected"]["wire_total"] = main["collectives"]["wire_total"]
+    return out
+
+
+def lower_cell(cfg: ArchConfig, cell: ShapeCell, *, multi_pod: bool,
+               consensus: bool = True) -> dict:
+    """Lower + compile one (arch x shape x mesh) cell; return the record."""
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    chips = mesh.devices.size
+    model = build_model(cfg)
+    rec: dict = {"arch": cfg.arch_id, "shape": cell.name,
+                 "mesh": "2x16x16" if multi_pod else "16x16",
+                 "chips": chips, "kind": cell.kind,
+                 "params_b": model.param_count() / 1e9,
+                 "active_params_b": model.active_param_count() / 1e9}
+    t0 = time.time()
+    use_consensus = consensus and multi_pod and cell.kind == "train"
+    key = {"train": "train", "prefill": "prefill", "decode": "decode"}[
+        cell.kind]
+    rec[key] = _corrected_record(cfg, cell, mesh, consensus=use_consensus)
+    if use_consensus:
+        rec["consensus"] = _corrected_record(cfg, cell, mesh,
+                                             consensus=True,
+                                             which="consensus")
+    rec["lower_compile_s"] = round(time.time() - t0, 1)
+    main = rec[key]
+    mf = model_flops(model, cell)
+    rec["model_flops"] = mf
+    hlo_flops_global = main["flops_per_device"] * chips
+    rec["useful_flop_frac"] = (mf / hlo_flops_global
+                               if hlo_flops_global else 0.0)
+    rec["roofline"] = roofline_terms(main["flops_per_device"],
+                                     main["hbm_bytes"],
+                                     main["collectives"]["wire_total"],
+                                     chips)
+    return rec
+
+
+def _record(compiled) -> dict:
+    cost = _cost_dict(compiled)
+    mem = _mem_dict(compiled)
+    coll = collective_bytes(compiled.as_text())
+    return {
+        "flops_per_device": float(cost.get("flops", 0.0)),
+        "hbm_bytes": float(cost.get("bytes accessed", 0.0)),
+        "memory": mem,
+        "bytes_per_device_gb": mem["total_hbm_bytes"] / 2**30,
+        "collectives": coll,
+    }
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="all")
+    ap.add_argument("--shape", default="all")
+    ap.add_argument("--mesh", choices=["single", "multi", "both"],
+                    default="both")
+    ap.add_argument("--out", default="dryrun_results.json")
+    ap.add_argument("--no-consensus", action="store_true")
+    ap.add_argument("--opt", action="store_true",
+                    help="apply the §Perf-confirmed optimization package "
+                         "(head padding, bf16 probs, serialized chunks, "
+                         "int8 consensus wire, fractional probes)")
+    args = ap.parse_args(argv)
+    if args.opt:
+        from repro.models import attention as _at
+        _at.PAD_HEADS_MULT = 16
+        _at.PROBS_BF16 = True
+        _at.SERIAL_CHUNKS = True
+        KNOBS["compression"] = "int8"
+        KNOBS["probe_frac"] = 8
+
+    results = []
+    if os.path.exists(args.out):
+        with open(args.out) as f:
+            results = json.load(f)
+    done = {(r["arch"], r["shape"], r["mesh"]) for r in results
+            if "error" not in r}
+
+    for cfg, cell, skip in cells():
+        if args.arch != "all" and cfg.arch_id != args.arch:
+            continue
+        if args.shape != "all" and cell.name != args.shape:
+            continue
+        meshes = {"single": [False], "multi": [True],
+                  "both": [False, True]}[args.mesh]
+        for multi_pod in meshes:
+            mesh_name = "2x16x16" if multi_pod else "16x16"
+            key = (cfg.arch_id, cell.name, mesh_name)
+            if key in done:
+                continue
+            if skip:
+                results.append({
+                    "arch": cfg.arch_id, "shape": cell.name,
+                    "mesh": mesh_name, "skipped": True,
+                    "reason": "full quadratic attention at 512k seq "
+                              "(no sub-quadratic path); see DESIGN.md §4"})
+                _flush(args.out, results)
+                continue
+            print(f"=== {cfg.arch_id} x {cell.name} x {mesh_name}",
+                  flush=True)
+            try:
+                rec = lower_cell(cfg, cell, multi_pod=multi_pod,
+                                 consensus=not args.no_consensus)
+                print(f"    ok in {rec['lower_compile_s']}s  "
+                      f"dom={rec['roofline']['dominant']}  "
+                      f"bytes/dev={rec.get('train', rec.get('prefill', rec.get('decode')))['bytes_per_device_gb']:.2f}GB",
+                      flush=True)
+                results.append(rec)
+            except Exception as e:  # noqa: BLE001 — record and continue
+                traceback.print_exc()
+                results.append({"arch": cfg.arch_id, "shape": cell.name,
+                                "mesh": mesh_name, "error": str(e)[:2000]})
+            _flush(args.out, results)
+    n_err = sum(1 for r in results if "error" in r)
+    print(f"done: {len(results)} records, {n_err} errors")
+    return 1 if n_err else 0
+
+
+def _flush(path, results):
+    with open(path + ".tmp", "w") as f:
+        json.dump(results, f, indent=1)
+    os.replace(path + ".tmp", path)
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,125 @@
+"""Training launcher: consensus-ADMM distributed training end to end.
+
+CPU-scale demo / integration entry (reduced configs); identical code path on
+real TPU — only the mesh and config sizes change.
+
+Example:
+  PYTHONPATH=src python -m repro.launch.train --arch qwen3-4b --reduced \\
+      --steps 40 --scheme nap --topology ring --local-steps 4 \\
+      --ckpt-dir /tmp/ckpt
+Resume is automatic if the checkpoint dir has state.
+"""
+from __future__ import annotations
+
+import argparse
+import os
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.checkpoint import latest_steps, restore, save_async, wait_pending
+from repro.configs import get_config, get_reduced_config
+from repro.core.penalty import PenaltyConfig, SCHEMES
+from repro.data import DataConfig, SyntheticTokens
+from repro.launch.mesh import make_debug_mesh, make_production_mesh
+from repro.models import build_model
+from repro.optim import ConsensusConfig, ConsensusTrainer
+from repro.optim.adamw import AdamWConfig
+from repro.runtime import RetryPolicy, StragglerMonitor, with_retries
+
+
+def parse_args(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="qwen3-4b")
+    ap.add_argument("--reduced", action="store_true",
+                    help="use the reduced smoke config (CPU-sized)")
+    ap.add_argument("--steps", type=int, default=24)
+    ap.add_argument("--batch-per-node", type=int, default=4)
+    ap.add_argument("--seq", type=int, default=32)
+    ap.add_argument("--mesh", choices=["debug", "prod", "none"],
+                    default="debug")
+    ap.add_argument("--multi-pod", action="store_true", default=True)
+    ap.add_argument("--scheme", choices=SCHEMES, default="nap")
+    ap.add_argument("--topology", default="ring")
+    ap.add_argument("--local-steps", type=int, default=4)
+    ap.add_argument("--eta0", type=float, default=0.1)
+    ap.add_argument("--lr", type=float, default=1e-2)
+    ap.add_argument("--compression", default="none")
+    ap.add_argument("--ckpt-dir", default="")
+    ap.add_argument("--ckpt-every", type=int, default=10)
+    ap.add_argument("--seed", type=int, default=0)
+    return ap.parse_args(argv)
+
+
+def main(argv=None):
+    args = parse_args(argv)
+    cfg = get_reduced_config(args.arch) if args.reduced \
+        else get_config(args.arch)
+    model = build_model(cfg)
+    if args.mesh == "prod":
+        mesh = make_production_mesh(multi_pod=args.multi_pod)
+    elif args.mesh == "debug":
+        mesh = make_debug_mesh(multi_pod=args.multi_pod)
+    else:
+        mesh = None
+
+    trainer = ConsensusTrainer(
+        model, mesh,
+        adamw=AdamWConfig(lr=args.lr),
+        consensus=ConsensusConfig(
+            penalty=PenaltyConfig(scheme=args.scheme, eta0=args.eta0),
+            topology=args.topology, local_steps=args.local_steps,
+            compression=args.compression))
+    state = trainer.init_state(jax.random.PRNGKey(args.seed))
+    start_step = 0
+    if args.ckpt_dir and latest_steps(args.ckpt_dir):
+        state, meta = restore(args.ckpt_dir, state)
+        start_step = int(meta["step"])
+        print(f"resumed from step {start_step}")
+
+    data = SyntheticTokens(DataConfig(
+        vocab=cfg.vocab, seq_len=args.seq,
+        batch_per_node=args.batch_per_node,
+        num_nodes=trainer.num_nodes, seed=args.seed))
+
+    train = jax.jit(trainer.train_step)
+    cons = jax.jit(trainer.consensus_step)
+    monitor = StragglerMonitor(trainer.num_nodes)
+    step_fn = with_retries(lambda s, b: train(s, b), RetryPolicy())
+
+    def make_batch(step):
+        if cfg.frontend != "none":
+            return data.embeds_batch(step, cfg.d_model)
+        return data.batch(step)
+
+    t_start = time.time()
+    for step in range(start_step, args.steps):
+        t0 = time.time()
+        batch = make_batch(step)
+        state, m = step_fn(state, batch)
+        jax.block_until_ready(m["loss"])
+        dt = time.time() - t0
+        slow = monitor.observe(np.full(trainer.num_nodes, dt))
+        line = f"step {step:5d} loss {float(m['loss']):.4f} {dt*1e3:.0f}ms"
+        if trainer.should_sync(step):
+            state, cm = cons(state, make_batch(10**6 + step))
+            line += (f" | consensus r={float(cm['r_max']):.4f} "
+                     f"eta={float(cm['eta_mean']):.4f}")
+        if slow:
+            line += f" | stragglers: {slow}"
+        print(line, flush=True)
+        if args.ckpt_dir and (step + 1) % args.ckpt_every == 0:
+            save_async(args.ckpt_dir, step + 1, state,
+                       metadata={"step": step + 1, "arch": cfg.arch_id,
+                                 "scheme": args.scheme,
+                                 "topology": args.topology})
+    wait_pending()
+    print(f"done: {args.steps - start_step} steps in "
+          f"{time.time() - t_start:.1f}s")
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

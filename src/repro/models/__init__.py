@@ -1,0 +1,6 @@
+"""Model zoo: unified decoder covering all assigned architecture families."""
+from repro.models.model import (Model, arch_rules, build_model, input_specs,
+                                input_spec_shardings, make_batch)
+
+__all__ = ["Model", "arch_rules", "build_model", "input_specs",
+           "input_spec_shardings", "make_batch"]

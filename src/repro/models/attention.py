@@ -1,0 +1,230 @@
+"""Causal (optionally sliding-window) GQA attention, train/prefill/decode.
+
+The einsum/GSPMD path is the canonical implementation (and what the dry-run
+lowers, so cost_analysis sees real FLOPs). The Pallas flash kernel in
+``repro.kernels`` is the TPU hot-path replacement, validated against
+``flash_ref`` here; switch with ``use_kernel=True``.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig
+from repro.distributed.sharding import shard
+from repro.models.layers import apply_rope, rms_norm, rope_table
+from repro.models.params import ParamDef
+
+NEG_INF = -1e30
+
+# §Perf knobs (hillclimb B), defaults = baseline behavior:
+# SERIAL_CHUNKS: thread an optimization_barrier between query chunks so the
+#   scheduler cannot keep every chunk's f32 logits alive at once (peak-memory
+#   fix for 32k prefill).
+# PROBS_BF16: store masked logits/probs in bf16 (max-subtraction still f32) —
+#   halves attention HBM traffic at <=1e-2 softmax error.
+SERIAL_CHUNKS = False
+PROBS_BF16 = False
+ATTN_CHUNK = 1024       # query-chunk length for the full-sequence path
+# Pad query heads up to a multiple (0 = off). Archs whose head count does
+# not divide the TP axis (qwen2: 28 heads vs TP=16, hymba: 25) otherwise
+# REPLICATE attention over the model axis — a 16x memory/compute waste.
+# Dummy heads have zero out-projection rows => numerically exact.
+PAD_HEADS_MULT = 0
+
+
+def eff_heads(cfg: ArchConfig) -> int:
+    """Padded query-head count: a multiple of lcm(PAD_HEADS_MULT, kv) so the
+    GQA repeat stays integral (hymba: 25 q / 5 kv -> 80 at TP=16).
+
+    Dummy heads have zero out-projection rows, so they contribute nothing;
+    note that when the repeat factor changes, the real-head -> kv grouping
+    changes too — identical capacity trained from scratch, but NOT a
+    drop-in remap for pretrained checkpoints (DESIGN.md §5b).
+    """
+    import math
+    h = cfg.n_heads
+    if PAD_HEADS_MULT and h % PAD_HEADS_MULT:
+        step = math.lcm(PAD_HEADS_MULT, max(cfg.n_kv_heads, 1))
+        h = ((h + step - 1) // step) * step
+    return h
+
+
+class KVCache(NamedTuple):
+    k: jax.Array     # [B, S_cache, K, hd]
+    v: jax.Array     # [B, S_cache, K, hd]
+    pos: jax.Array   # [] int32 — next write position (ring for sliding)
+
+
+def attn_defs(cfg: ArchConfig, dtype) -> dict:
+    d, h, k, hd = cfg.d_model, eff_heads(cfg), cfg.n_kv_heads, cfg.head_dim
+    out = {
+        "wq": ParamDef((d, h, hd), ("fsdp", "heads", None), dtype),
+        "wk": ParamDef((d, k, hd), ("fsdp", "kv_heads", None), dtype),
+        "wv": ParamDef((d, k, hd), ("fsdp", "kv_heads", None), dtype),
+        "wo": ParamDef((h, hd, d), ("heads", None, "fsdp"), dtype),
+    }
+    if cfg.qkv_bias:
+        out["bq"] = ParamDef((h, hd), ("heads", None), dtype, init="zeros")
+        out["bk"] = ParamDef((k, hd), ("kv_heads", None), dtype, init="zeros")
+        out["bv"] = ParamDef((k, hd), ("kv_heads", None), dtype, init="zeros")
+    if cfg.qk_norm:
+        out["qn"] = ParamDef((hd,), (None,), dtype, init="zeros")
+        out["kn"] = ParamDef((hd,), (None,), dtype, init="zeros")
+    return out
+
+
+def _project_qkv(cfg: ArchConfig, p: dict, x: jax.Array):
+    q = jnp.einsum("bsd,dhk->bshk", x, p["wq"])
+    k = jnp.einsum("bsd,dhk->bshk", x, p["wk"])
+    v = jnp.einsum("bsd,dhk->bshk", x, p["wv"])
+    if cfg.qkv_bias:
+        q = q + p["bq"][None, None]
+        k = k + p["bk"][None, None]
+        v = v + p["bv"][None, None]
+    if cfg.qk_norm:
+        q = rms_norm(q, p["qn"], cfg.norm_eps)
+        k = rms_norm(k, p["kn"], cfg.norm_eps)
+    return q, k, v
+
+
+def _repeat_kv(x: jax.Array, n_rep: int) -> jax.Array:
+    if n_rep == 1:
+        return x
+    b, s, k, hd = x.shape
+    return jnp.broadcast_to(x[:, :, :, None, :],
+                            (b, s, k, n_rep, hd)).reshape(b, s, k * n_rep, hd)
+
+
+def flash_ref(q: jax.Array, k: jax.Array, v: jax.Array, *, causal: bool,
+              window: int = 0, q_offset: int | jax.Array = 0) -> jax.Array:
+    """Reference attention. q: [B,Sq,H,hd]; k,v: [B,Sk,H,hd] (post-GQA)."""
+    b, sq, h, hd = q.shape
+    sk = k.shape[1]
+    scale = 1.0 / jnp.sqrt(jnp.asarray(hd, jnp.float32))
+    logits = jnp.einsum("bqhd,bkhd->bhqk", q, k).astype(jnp.float32) * scale
+    qpos = jnp.arange(sq)[:, None] + q_offset      # absolute query positions
+    kpos = jnp.arange(sk)[None, :]
+    mask = jnp.ones((sq, sk), bool)
+    if causal:
+        mask &= kpos <= qpos
+    if window > 0:
+        mask &= kpos > qpos - window
+    logits = jnp.where(mask[None, None], logits, NEG_INF)
+    if PROBS_BF16:
+        # store the post-max-subtraction probs in bf16: halves attention HBM
+        # traffic; the max-subtraction and the normalizer stay f32
+        m = jax.lax.stop_gradient(logits.max(axis=-1, keepdims=True))
+        probs16 = jnp.exp(logits - m).astype(jnp.bfloat16)
+        denom = probs16.astype(jnp.float32).sum(axis=-1, keepdims=True)
+        out = jnp.einsum("bhqk,bkhd->bqhd", probs16.astype(q.dtype), v)
+        return out / jnp.swapaxes(denom, 1, 2).astype(out.dtype)
+    probs = jax.nn.softmax(logits, axis=-1).astype(q.dtype)
+    return jnp.einsum("bhqk,bkhd->bqhd", probs, v)
+
+
+def chunked_causal_attention(q, k, v, *, window: int = 0,
+                             chunk: int = 1024) -> jax.Array:
+    """Memory-bounded causal attention: statically unrolled query blocks.
+
+    Each query block attends only to K/V up to its own end (static slice) —
+    the upper-triangle FLOPs of the naive einsum are never issued and the
+    logits working set is [B, H, chunk, <=S] instead of [B, H, S, S].
+    With a sliding window the K/V slice start is also static, so long-context
+    prefill for windowed archs is O(S * window). This is the GSPMD analogue
+    of the Pallas flash kernel (which owns the on-TPU tiling).
+    """
+    b, sq, h, hd = q.shape
+    if sq <= chunk:
+        return flash_ref(q, k, v, causal=True, window=window)
+    assert sq % chunk == 0, (sq, chunk)
+    outs = []
+    prev = None
+    for i in range(sq // chunk):
+        q_blk = jax.lax.slice_in_dim(q, i * chunk, (i + 1) * chunk, axis=1)
+        if SERIAL_CHUNKS and prev is not None:
+            # artificial dependence: chunk i+1 may not start before chunk i
+            # finishes => only one chunk's f32 logits are ever live
+            q_blk, prev = jax.lax.optimization_barrier((q_blk, prev))
+        k_end = (i + 1) * chunk
+        k_start = max(0, i * chunk - window + 1) if window > 0 else 0
+        # align to chunk for tidy tiles
+        k_start = (k_start // chunk) * chunk
+        k_blk = jax.lax.slice_in_dim(k, k_start, k_end, axis=1)
+        v_blk = jax.lax.slice_in_dim(v, k_start, k_end, axis=1)
+        out = flash_ref(q_blk, k_blk, v_blk, causal=True,
+                        window=window, q_offset=i * chunk - k_start)
+        outs.append(out)
+        prev = out
+    return jnp.concatenate(outs, axis=1)
+
+
+def attention(cfg: ArchConfig, p: dict, x: jax.Array, cos, sin,
+              use_kernel: bool = False, chunk: int | None = None
+              ) -> jax.Array:
+    """Full-sequence path (train / prefill). x: [B, S, D]."""
+    if chunk is None:
+        chunk = ATTN_CHUNK
+    q, k, v = _project_qkv(cfg, p, x)
+    q = apply_rope(q, cos, sin)
+    k = apply_rope(k, cos, sin)
+    q = shard(q, "batch", None, "heads", None)
+    k = shard(k, "batch", None, "kv_heads", None)
+    n_rep = q.shape[2] // k.shape[2]       # shape-driven (head padding)
+    k, v = _repeat_kv(k, n_rep), _repeat_kv(v, n_rep)
+    if use_kernel:
+        from repro.kernels import ops as kops
+        out = kops.flash_attention(q, k, v, causal=True,
+                                   window=cfg.sliding_window)
+    else:
+        out = chunked_causal_attention(q, k, v, window=cfg.sliding_window,
+                                       chunk=chunk)
+    out = shard(out, "batch", None, "heads", None)
+    return jnp.einsum("bshk,hkd->bsd", out, p["wo"])
+
+
+# ------------------------------------------------------------- decoding -----
+def init_cache(cfg: ArchConfig, batch: int, max_len: int, dtype) -> KVCache:
+    """Sliding-window archs keep a ring buffer of `window`, else full S."""
+    s = min(max_len, cfg.sliding_window) if cfg.sliding_window else max_len
+    shape = (batch, s, cfg.n_kv_heads, cfg.head_dim)
+    return KVCache(k=jnp.zeros(shape, dtype), v=jnp.zeros(shape, dtype),
+                   pos=jnp.zeros((), jnp.int32))
+
+
+def decode_attention(cfg: ArchConfig, p: dict, x: jax.Array,
+                     cache: KVCache, pos: jax.Array,
+                     rope_cos_full, rope_sin_full
+                     ) -> tuple[jax.Array, KVCache]:
+    """One-token step. x: [B, 1, D]; pos: [] absolute position."""
+    q, k, v = _project_qkv(cfg, p, x)
+    cos = jax.lax.dynamic_slice_in_dim(rope_cos_full, pos, 1)
+    sin = jax.lax.dynamic_slice_in_dim(rope_sin_full, pos, 1)
+    q = apply_rope(q, cos, sin)
+    k = apply_rope(k, cos, sin)
+
+    s_cache = cache.k.shape[1]
+    write = pos % s_cache if cfg.sliding_window else pos
+    k_all = jax.lax.dynamic_update_slice_in_dim(cache.k, k, write, axis=1)
+    v_all = jax.lax.dynamic_update_slice_in_dim(cache.v, v, write, axis=1)
+
+    n_rep = q.shape[2] // k_all.shape[2]   # shape-driven (head padding)
+    kr, vr = _repeat_kv(k_all, n_rep), _repeat_kv(v_all, n_rep)
+    scale = 1.0 / jnp.sqrt(jnp.asarray(cfg.head_dim, jnp.float32))
+    logits = jnp.einsum("bqhd,bkhd->bhqk", q, kr).astype(jnp.float32) * scale
+    kpos = jnp.arange(s_cache)
+    if cfg.sliding_window:
+        valid = (kpos <= write) | (pos >= s_cache)   # ring buffer occupancy
+    else:
+        valid = kpos <= pos
+    logits = jnp.where(valid[None, None, None, :], logits, NEG_INF)
+    probs = jax.nn.softmax(logits, axis=-1).astype(x.dtype)
+    out = jnp.einsum("bhqk,bkhd->bqhd", probs, vr)
+    y = jnp.einsum("bshk,hkd->bsd", out, p["wo"])
+    return y, KVCache(k=k_all, v=v_all, pos=pos + 1)
+
+
+def make_rope(cfg: ArchConfig, seq_len: int, dtype=jnp.float32):
+    return rope_table(seq_len, cfg.head_dim, cfg.rope_theta, dtype)

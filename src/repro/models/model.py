@@ -1,0 +1,155 @@
+"""Public model API: build a model from an ArchConfig.
+
+``Model`` bundles the pure functions (init / loss / prefill / decode) plus
+the abstract param tree and sharding specs the launcher and dry-run need.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ArchConfig, ShapeCell
+from repro.distributed import sharding as shd
+from repro.models import params as plib
+from repro.models import transformer as tf
+
+
+def arch_rules(cfg: ArchConfig, mesh) -> dict:
+    """Per-arch logical->mesh rules (handles indivisible head counts)."""
+    tp = mesh.shape["model"] if mesh is not None else 1
+    from repro.models.attention import eff_heads
+    h_eff = eff_heads(cfg)
+    heads_ok = h_eff % tp == 0 and h_eff > 0
+    kv_ok = cfg.n_kv_heads % tp == 0 and cfg.n_kv_heads > 0
+    rules = shd.default_rules(mesh, kv_divisible=kv_ok,
+                              heads_divisible=heads_ok)
+    # flattened head projections (SSM / RWKV) shard if q_dim divides
+    rules["heads_flat"] = "model" if cfg.q_dim % max(tp, 1) == 0 else None
+    if cfg.d_ff % max(tp, 1) != 0:
+        rules["mlp"] = None
+    if cfg.vocab % max(tp, 1) != 0:
+        rules["vocab"] = None
+    return rules
+
+
+@dataclasses.dataclass(frozen=True, eq=False)
+class Model:
+    cfg: ArchConfig
+    dtype: Any
+
+    # ----------------------------------------------------------- params -----
+    def param_defs(self) -> dict:
+        return tf.stacked_defs(self.cfg, self.dtype)
+
+    def init(self, key: jax.Array) -> dict:
+        return plib.materialize(key, self.param_defs())
+
+    def abstract_params(self) -> dict:
+        return plib.abstract(self.param_defs())
+
+    def param_specs(self) -> dict:
+        return plib.spec_tree(self.param_defs())
+
+    def param_count(self) -> int:
+        return plib.count(self.param_defs())
+
+    def active_param_count(self) -> int:
+        """Per-token touched params (MoE experts scaled by top_k/E)."""
+        defs = self.param_defs()
+        total = 0
+        for path, leaf in jax.tree_util.tree_flatten_with_path(
+                defs, is_leaf=lambda x: isinstance(x, plib.ParamDef))[0]:
+            n = int(np.prod(leaf.shape))
+            keys = [getattr(k, "key", str(k)) for k in path]
+            if self.cfg.moe is not None and any(
+                    k in ("wg", "wu", "wd") for k in keys):
+                n = n * self.cfg.moe.top_k // self.cfg.moe.num_experts
+            total += n
+        return total
+
+    # ---------------------------------------------------------- training ----
+    def loss(self, params: dict, batch: dict, remat: bool = True):
+        return tf.loss_fn(self.cfg, params, batch, remat=remat)
+
+    # ----------------------------------------------------------- serving ----
+    def prefill(self, params: dict, batch: dict) -> jax.Array:
+        return tf.forward(self.cfg, params, tokens=batch.get("tokens"),
+                          embeds=batch.get("embeds"), remat=False)
+
+    def init_decode_state(self, batch: int, max_len: int) -> tf.DecodeState:
+        return tf.init_decode_state(self.cfg, batch, max_len)
+
+    def decode_step(self, params, state, token, *, max_len: int,
+                    embed_in=None):
+        return tf.decode_step(self.cfg, params, state, token,
+                              max_len=max_len, embed_in=embed_in)
+
+
+def build_model(cfg: ArchConfig) -> Model:
+    return Model(cfg=cfg, dtype=jnp.dtype(cfg.dtype))
+
+
+# ------------------------------------------------------------ input specs ---
+def input_specs(cfg: ArchConfig, cell: ShapeCell) -> dict:
+    """ShapeDtypeStructs for every model input of a dry-run cell.
+
+    The modality frontends of [audio]/[vlm] archs are STUBS: their
+    ``embeds`` input stands in for precomputed EnCodec-frame / vision-patch
+    embeddings, per the assignment. ``decode`` cells describe ONE new token
+    against a seq_len-deep cache.
+    """
+    b, s = cell.global_batch, cell.seq_len
+    stub_frontend = cfg.frontend != "none"
+    if cell.kind in ("train", "prefill"):
+        if stub_frontend:
+            specs = {"embeds": jax.ShapeDtypeStruct((b, s, cfg.d_model),
+                                                    jnp.dtype(cfg.dtype))}
+        else:
+            specs = {"tokens": jax.ShapeDtypeStruct((b, s), jnp.int32)}
+        if cell.kind == "train":
+            specs["labels"] = jax.ShapeDtypeStruct((b, s), jnp.int32)
+        return specs
+    # decode: one token (or one stub embedding) per sequence
+    if stub_frontend:
+        return {"embed_in": jax.ShapeDtypeStruct((b, cfg.d_model),
+                                                 jnp.dtype(cfg.dtype))}
+    return {"token": jax.ShapeDtypeStruct((b,), jnp.int32)}
+
+
+def input_spec_shardings(cfg: ArchConfig, cell: ShapeCell, mesh) -> dict:
+    """NamedShardings matching input_specs under the current rules."""
+    from jax.sharding import NamedSharding
+    with shd.use_mesh(mesh, arch_rules(cfg, mesh)):
+        def spec_for(name):
+            if name in ("tokens", "labels"):
+                return shd.logical_to_spec(("batch", None))
+            if name == "embeds":
+                return shd.logical_to_spec(("batch", None, None))
+            if name == "token":
+                return shd.logical_to_spec(("batch",))
+            if name == "embed_in":
+                return shd.logical_to_spec(("batch", None))
+            raise KeyError(name)
+
+        specs = input_specs(cfg, cell)
+        return {name: NamedSharding(
+            mesh, shd.fit_spec(mesh, specs[name].shape, spec_for(name)))
+            for name in specs}
+
+
+def make_batch(cfg: ArchConfig, cell: ShapeCell, key: jax.Array) -> dict:
+    """Concrete random batch matching input_specs (smoke tests)."""
+    specs = input_specs(cfg, cell)
+    out = {}
+    for name, sds in specs.items():
+        if sds.dtype == jnp.int32:
+            out[name] = jax.random.randint(key, sds.shape, 0, cfg.vocab,
+                                           jnp.int32)
+        else:
+            out[name] = jax.random.normal(key, sds.shape, jnp.float32) \
+                .astype(sds.dtype)
+    return out

@@ -1,0 +1,82 @@
+"""Abstract parameter definitions.
+
+Models declare their parameters as a pytree of ``ParamDef`` (shape + dtype +
+logical sharding axes + initializer). The same tree serves three consumers:
+
+  * ``materialize`` — real initialization for CPU smoke tests / examples;
+  * ``abstract``    — ShapeDtypeStructs for the dry-run (no allocation);
+  * ``shardings``   — NamedShardings for pjit in/out specs.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Any, Callable, Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.distributed.sharding import logical_to_spec
+
+
+@dataclasses.dataclass(frozen=True)
+class ParamDef:
+    shape: tuple[int, ...]
+    logical_axes: tuple[str | None, ...]
+    dtype: Any = jnp.float32
+    init: str = "normal"       # normal | zeros | ones | embed
+    scale: float | None = None  # None => fan-in
+
+    def __post_init__(self):
+        assert len(self.shape) == len(self.logical_axes), (
+            self.shape, self.logical_axes)
+
+
+def _init_one(key, d: ParamDef):
+    if d.init == "zeros":
+        return jnp.zeros(d.shape, d.dtype)
+    if d.init == "ones":
+        return jnp.ones(d.shape, d.dtype)
+    scale = d.scale
+    if scale is None:
+        fan_in = d.shape[0] if len(d.shape) >= 2 else max(d.shape[0], 1)
+        if len(d.shape) >= 3:  # stacked [L, in, out] or [E, in, out]
+            fan_in = d.shape[-2]
+        scale = 1.0 / math.sqrt(fan_in)
+    if d.init == "embed":
+        scale = 1.0
+    return (scale * jax.random.normal(key, d.shape, jnp.float32)).astype(
+        d.dtype)
+
+
+def materialize(key: jax.Array, defs: Any) -> Any:
+    leaves, treedef = jax.tree_util.tree_flatten(
+        defs, is_leaf=lambda x: isinstance(x, ParamDef))
+    keys = jax.random.split(key, len(leaves))
+    vals = [_init_one(k, d) for k, d in zip(keys, leaves)]
+    return jax.tree_util.tree_unflatten(treedef, vals)
+
+
+def abstract(defs: Any) -> Any:
+    return jax.tree_util.tree_map(
+        lambda d: jax.ShapeDtypeStruct(d.shape, d.dtype),
+        defs, is_leaf=lambda x: isinstance(x, ParamDef))
+
+
+def spec_tree(defs: Any) -> Any:
+    """Pytree of PartitionSpec mirroring the param tree (uses current rules)."""
+    return jax.tree_util.tree_map(
+        lambda d: logical_to_spec(d.logical_axes),
+        defs, is_leaf=lambda x: isinstance(x, ParamDef))
+
+
+def count(defs: Any) -> int:
+    return sum(int(np.prod(d.shape)) for d in jax.tree_util.tree_leaves(
+        defs, is_leaf=lambda x: isinstance(x, ParamDef)))
+
+
+def bytes_of(defs: Any) -> int:
+    return sum(int(np.prod(d.shape)) * jnp.dtype(d.dtype).itemsize
+               for d in jax.tree_util.tree_leaves(
+                   defs, is_leaf=lambda x: isinstance(x, ParamDef)))

@@ -1,0 +1,230 @@
+"""RWKV6 ("Finch") block: time-mix with data-dependent decay + channel-mix.
+
+Per head (dim hd), with receptance r, key k, value v, decay w in (0,1),
+bonus u:
+    y_t = r_t^T (S_{t-1} + diag(u) k_t v_t^T)
+    S_t = diag(w_t) S_{t-1} + k_t v_t^T          S in R^{hd x hd}
+
+Token shift uses the RWKV6 dynamic ddlerp (low-rank data-dependent mix).
+Reference = lax.scan; the Pallas chunked WKV kernel targets the TPU hot path.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig
+from repro.models.params import ParamDef
+
+_MIX_RANK = 32
+_DECAY_RANK = 64
+_N_MIX = 5  # r, k, v, w, g
+
+# dry-run FLOPs-accounting knob (see transformer.SCAN_UNROLL)
+TIME_UNROLL = 1
+
+# perf knob (§Perf hillclimb A): 0 = per-step lax.scan reference; >0 = chunked
+# matmul formulation with this chunk length (the GSPMD mirror of the Pallas
+# kernel). Cuts the time-scan trip count by the chunk factor and turns VPU
+# outer products into MXU matmuls.
+TIME_CHUNK = 0
+
+# §Perf knob: force bf16 output on the row-parallel (TP) output projections.
+# XLA otherwise all-reduces the f32 pre-convert dot partials — the dominant
+# per-layer collective is the [B,S,D] activation psum, so this halves it.
+PSUM_BF16 = False
+
+# §Perf knob: replicate the tiny ddlerp/decay LoRA params instead of FSDP-
+# sharding them. Sharding a [D, rank] weight's D on 'data' makes its product
+# [B, S, D] carry D-on-data sharding that CONFLICTS with B-on-data activation
+# sharding => GSPMD inserts full-activation reshards every layer.
+LORA_REPLICATED = False
+
+
+def _rp_matmul(a, w):
+    """Row-parallel matmul whose psum wire dtype we control."""
+    if PSUM_BF16:
+        return jnp.einsum("...k,kd->...d", a, w,
+                          preferred_element_type=jnp.bfloat16)
+    return a @ w
+
+
+def wkv_chunked(r, k, v, w, u, s0, chunk: int):
+    """Chunked WKV6 (same math as kernels/rwkv6_scan, pure jnp).
+
+    r,k,v,w: [B,S,H,hd] (w = decay in (0,1)); u: [H,hd]; s0: [B,H,hd,hd].
+    """
+    b, s, h, hd = r.shape
+    chunk = min(chunk, s)
+    assert s % chunk == 0, (s, chunk)
+    n = s // chunk
+    lw = jnp.log(jnp.maximum(w.astype(jnp.float32), 1e-38))
+    split = lambda t: jnp.moveaxis(
+        t.reshape(b, n, chunk, h, hd), 1, 0)          # [n,B,C,H,hd]
+    rs_, ks_, vs_, lws_ = (split(t) for t in (r, k, v, lw))
+
+    def body(state, inp):
+        rc, kc, vc, lwc = inp                        # [B,C,H,hd]
+        rc = rc.astype(jnp.float32)
+        kc = kc.astype(jnp.float32)
+        vc = vc.astype(jnp.float32)
+        ls = jnp.cumsum(lwc, axis=1) - lwc           # exclusive cumsum over C
+        ls_tot = ls[:, -1] + lwc[:, -1]              # [B,H,hd]
+        r_s = rc * jnp.exp(ls)
+        y = jnp.einsum("bchk,bhkv->bchv", r_s, state)
+        c_mid = 0.5 * ls_tot[:, None]                # re-centering (kernel)
+        r_dec = rc * jnp.exp(ls - c_mid)
+        k_dec = kc * jnp.exp(c_mid - ls - lwc)
+        a = jnp.einsum("bchk,bdhk->bhcd", r_dec, k_dec)
+        ii = jax.lax.broadcasted_iota(jnp.int32, a.shape, 2)
+        ll = jax.lax.broadcasted_iota(jnp.int32, a.shape, 3)
+        a = jnp.where(ll < ii, a, 0.0)
+        # current-step bonus on the diagonal: sum_d r*u*k
+        diag = jnp.sum(rc * u.astype(jnp.float32)[None, None] * kc, axis=-1)
+        diag_t = jnp.swapaxes(diag, 1, 2)            # [B,H,C]
+        a = a + jnp.where(ll == ii, diag_t[:, :, :, None], 0.0)
+        y = y + jnp.einsum("bhcd,bdhv->bchv", a, vc)
+        k_carry = kc * jnp.exp(ls_tot[:, None] - ls - lwc)
+        s_new = jnp.exp(ls_tot)[..., None] * state \
+            + jnp.einsum("bchk,bchv->bhkv", k_carry, vc)
+        return s_new, y.astype(r.dtype)
+
+    s_last, ys = jax.lax.scan(body, s0.astype(jnp.float32),
+                              (rs_, ks_, vs_, lws_),
+                              unroll=min(TIME_UNROLL, n))
+    y = jnp.moveaxis(ys, 0, 1).reshape(b, s, h, hd)
+    return y, s_last
+
+
+class RWKVState(NamedTuple):
+    s: jax.Array        # [B, H, hd, hd]  WKV state
+    prev_tm: jax.Array  # [B, D] last input to time-mix (token shift)
+    prev_cm: jax.Array  # [B, D] last input to channel-mix
+
+
+def rwkv_defs(cfg: ArchConfig, dtype) -> dict:
+    d, f = cfg.d_model, cfg.d_ff
+    hh, hd = cfg.n_heads, cfg.head_dim
+    return {
+        # time-mix
+        "maa_x": ParamDef((d,), (None,), dtype, init="zeros"),
+        "maa": ParamDef((_N_MIX, d), (None, None), dtype, init="zeros"),
+        "tm_w1": ParamDef((d, _N_MIX * _MIX_RANK),
+                          (None if LORA_REPLICATED else "fsdp", None), dtype),
+        "tm_w2": ParamDef((_N_MIX, _MIX_RANK, d),
+                          (None, None, None if LORA_REPLICATED else "fsdp"),
+                          dtype),
+        "td_w1": ParamDef((d, _DECAY_RANK),
+                          (None if LORA_REPLICATED else "fsdp", None), dtype),
+        "td_w2": ParamDef((_DECAY_RANK, d),
+                          (None, None if LORA_REPLICATED else "fsdp"), dtype),
+        "decay_base": ParamDef((d,), (None,), dtype, init="zeros"),
+        "bonus_u": ParamDef((hh, hd), (None, None), dtype, init="zeros"),
+        "wr": ParamDef((d, d), ("fsdp", "heads_flat"), dtype),
+        "wk": ParamDef((d, d), ("fsdp", "heads_flat"), dtype),
+        "wv": ParamDef((d, d), ("fsdp", "heads_flat"), dtype),
+        "wg": ParamDef((d, d), ("fsdp", "heads_flat"), dtype),
+        "wo_tm": ParamDef((d, d), ("heads_flat", "fsdp"), dtype),
+        "ln_x": ParamDef((d,), (None,), dtype, init="zeros"),
+        # channel-mix
+        "cm_maa_k": ParamDef((d,), (None,), dtype, init="zeros"),
+        "cm_maa_r": ParamDef((d,), (None,), dtype, init="zeros"),
+        "cm_wk": ParamDef((d, f), ("fsdp", "mlp"), dtype),
+        "cm_wv": ParamDef((f, d), ("mlp", "fsdp"), dtype),
+        "cm_wr": ParamDef((d, d), ("fsdp", None), dtype),
+    }
+
+
+def _token_shift(x: jax.Array, prev: jax.Array) -> jax.Array:
+    """shift(x)_t = x_{t-1}; position 0 uses `prev` (zeros at seq start)."""
+    return jnp.concatenate([prev[:, None, :], x[:, :-1, :]], axis=1)
+
+
+def _ddlerp(p: dict, x: jax.Array, xs: jax.Array):
+    """RWKV6 dynamic 5-way token-shift mix. Returns [5, B, S, D]."""
+    dx = xs - x
+    base = x + dx * p["maa_x"][None, None, :]
+    lora = jnp.tanh(base @ p["tm_w1"])                  # [B,S,5*rank]
+    b, s, _ = x.shape
+    lora = lora.reshape(b, s, _N_MIX, _MIX_RANK)
+    dyn = jnp.einsum("bsnr,nrd->nbsd", lora, p["tm_w2"])
+    mix = p["maa"][:, None, None, :] + dyn              # [5,B,S,D]
+    return x[None] + dx[None] * mix
+
+
+def wkv_ref(r, k, v, w, u, s0):
+    """Reference WKV recurrence.
+
+    r,k,v: [B,S,H,hd]; w: [B,S,H,hd] decay in (0,1); u: [H,hd];
+    s0: [B,H,hd,hd]. Returns (y [B,S,H,hd], s_final).
+    """
+    def step(s, inp):
+        rt, kt, vt, wt = inp            # [B,H,hd] each
+        kv = kt[..., :, None] * vt[..., None, :]        # [B,H,hd,hd]
+        y = jnp.einsum("bhk,bhkv->bhv", rt,
+                       s + u[None, :, :, None] * kv)
+        s = wt[..., None] * s + kv
+        return s, y
+
+    xs = tuple(jnp.moveaxis(t, 1, 0).astype(jnp.float32)
+               for t in (r, k, v, w))
+    s_last, ys = jax.lax.scan(step, s0.astype(jnp.float32), xs,
+                              unroll=min(TIME_UNROLL, r.shape[1]))
+    return jnp.moveaxis(ys, 0, 1), s_last
+
+
+def _group_norm(x: jax.Array, scale: jax.Array, heads: int,
+                eps: float) -> jax.Array:
+    b, s, d = x.shape
+    xh = x.reshape(b, s, heads, -1).astype(jnp.float32)
+    mean = xh.mean(-1, keepdims=True)
+    var = xh.var(-1, keepdims=True)
+    xh = (xh - mean) * jax.lax.rsqrt(var + eps)
+    return (xh.reshape(b, s, d)
+            * (1.0 + scale.astype(jnp.float32))).astype(x.dtype)
+
+
+def time_mix(cfg: ArchConfig, p: dict, x: jax.Array,
+             state: RWKVState | None, use_kernel: bool = False
+             ) -> tuple[jax.Array, jax.Array, jax.Array]:
+    """Returns (y, s_final, last_x)."""
+    b, s, d = x.shape
+    hh, hd = cfg.n_heads, cfg.head_dim
+    prev = state.prev_tm if state is not None else jnp.zeros((b, d), x.dtype)
+    xs = _token_shift(x, prev)
+    mr, mk, mv, mw, mg = _ddlerp(p, x, xs)
+    r = (mr @ p["wr"]).reshape(b, s, hh, hd)
+    k = (mk @ p["wk"]).reshape(b, s, hh, hd)
+    v = (mv @ p["wv"]).reshape(b, s, hh, hd)
+    g = jax.nn.silu(mg @ p["wg"])
+    decay_logit = p["decay_base"][None, None, :] \
+        + jnp.tanh(mw @ p["td_w1"]) @ p["td_w2"]
+    w = jnp.exp(-jnp.exp(decay_logit.astype(jnp.float32)))
+    w = w.reshape(b, s, hh, hd)
+    s0 = state.s if state is not None else jnp.zeros((b, hh, hd, hd),
+                                                     jnp.float32)
+    if use_kernel:
+        from repro.kernels import ops as kops
+        y, s_last = kops.rwkv6_scan(r, k, v, w, p["bonus_u"], s0)
+    elif TIME_CHUNK > 0 and s > 1:
+        y, s_last = wkv_chunked(r, k, v, w, p["bonus_u"], s0, TIME_CHUNK)
+    else:
+        y, s_last = wkv_ref(r, k, v, w, p["bonus_u"], s0)
+    y = _group_norm(y.astype(x.dtype).reshape(b, s, d), p["ln_x"], hh,
+                    cfg.norm_eps * 64)
+    y = _rp_matmul(y * g, p["wo_tm"])
+    return y, s_last, x[:, -1, :]
+
+
+def channel_mix(cfg: ArchConfig, p: dict, x: jax.Array,
+                state: RWKVState | None) -> tuple[jax.Array, jax.Array]:
+    b, s, d = x.shape
+    prev = state.prev_cm if state is not None else jnp.zeros((b, d), x.dtype)
+    xs = _token_shift(x, prev)
+    xk = x + (xs - x) * p["cm_maa_k"][None, None, :]
+    xr = x + (xs - x) * p["cm_maa_r"][None, None, :]
+    kk = jnp.square(jax.nn.relu(xk @ p["cm_wk"]))
+    rr = jax.nn.sigmoid(xr @ p["cm_wr"])
+    return rr * _rp_matmul(kk, p["cm_wv"]), x[:, -1, :]

@@ -1,0 +1,91 @@
+"""Mamba2-style selective SSM head (the SSM half of Hymba blocks).
+
+Per head h with state size N:   (discretized, dt > 0 via softplus)
+    h_t = exp(-dt_t * exp(A_log)) * h_{t-1} + dt_t * (x_t outer B_t)
+    y_t = h_t @ C_t + D_skip * x_t
+with B_t, C_t shared across heads (n_groups=1) and a SiLU gate z.
+The depthwise causal conv of Mamba is omitted (DESIGN.md §4); the paper's
+technique is optimizer-level and unaffected.
+
+Reference = lax.scan over time; the Pallas chunked kernel in repro.kernels
+targets the TPU hot path for long_500k prefill.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig
+from repro.models.params import ParamDef
+
+
+class SSMState(NamedTuple):
+    h: jax.Array    # [B, H, hd, N]
+
+
+# dry-run FLOPs-accounting knob (see transformer.SCAN_UNROLL)
+TIME_UNROLL = 1
+
+
+def ssm_defs(cfg: ArchConfig, dtype) -> dict:
+    d, di, n, hh = cfg.d_model, cfg.q_dim, cfg.ssm_state, cfg.n_heads
+    return {
+        "w_x": ParamDef((d, di), ("fsdp", "heads_flat"), dtype),
+        "w_z": ParamDef((d, di), ("fsdp", "heads_flat"), dtype),
+        "w_b": ParamDef((d, n), ("fsdp", None), dtype),
+        "w_c": ParamDef((d, n), ("fsdp", None), dtype),
+        "w_dt": ParamDef((d, hh), ("fsdp", None), dtype),
+        "dt_bias": ParamDef((hh,), (None,), dtype, init="zeros"),
+        "a_log": ParamDef((hh,), (None,), dtype, init="zeros"),
+        "d_skip": ParamDef((hh,), (None,), dtype, init="ones"),
+        "w_out": ParamDef((di, d), ("heads_flat", "fsdp"), dtype),
+    }
+
+
+def _proj(cfg: ArchConfig, p: dict, x: jax.Array):
+    b, s, _ = x.shape
+    hh, hd = cfg.n_heads, cfg.head_dim
+    xi = (x @ p["w_x"]).reshape(b, s, hh, hd)
+    z = x @ p["w_z"]
+    bt = x @ p["w_b"]                                     # [B, S, N]
+    ct = x @ p["w_c"]
+    dt = jax.nn.softplus((x @ p["w_dt"]).astype(jnp.float32)
+                         + p["dt_bias"].astype(jnp.float32))   # [B, S, H]
+    decay = jnp.exp(-dt * jnp.exp(p["a_log"].astype(jnp.float32)))
+    return xi, z, bt, ct, dt, decay
+
+
+def ssm_apply(cfg: ArchConfig, p: dict, x: jax.Array,
+              state: SSMState | None = None
+              ) -> tuple[jax.Array, SSMState]:
+    """Full-sequence scan. x: [B, S, D]. Returns (y, final state)."""
+    b, s, d = x.shape
+    hh, hd, n = cfg.n_heads, cfg.head_dim, cfg.ssm_state
+    xi, z, bt, ct, dt, decay = _proj(cfg, p, x)
+    h0 = state.h if state is not None else jnp.zeros(
+        (b, hh, hd, n), jnp.float32)
+
+    def step(h, inp):
+        xt, btt, ctt, dtt, dec = inp     # [B,H,hd], [B,N], [B,N], [B,H], ...
+        upd = (dtt[:, :, None] * xt)[..., None] * btt[:, None, None, :]
+        h = dec[:, :, None, None] * h + upd.astype(jnp.float32)
+        y = jnp.einsum("bhdn,bn->bhd", h, ctt.astype(jnp.float32))
+        return h, y
+
+    xs = (jnp.moveaxis(xi, 1, 0), jnp.moveaxis(bt, 1, 0),
+          jnp.moveaxis(ct, 1, 0), jnp.moveaxis(dt, 1, 0),
+          jnp.moveaxis(decay, 1, 0))
+    h_last, ys = jax.lax.scan(step, h0, xs, unroll=min(TIME_UNROLL, s))
+    y = jnp.moveaxis(ys, 0, 1).astype(x.dtype)            # [B, S, H, hd]
+    y = y + p["d_skip"][None, None, :, None] * xi
+    y = (y.reshape(b, s, -1) * jax.nn.silu(z))
+    return y @ p["w_out"], SSMState(h=h_last)
+
+
+def ssm_decode(cfg: ArchConfig, p: dict, x: jax.Array,
+               state: SSMState) -> tuple[jax.Array, SSMState]:
+    """Single-token step. x: [B, 1, D]."""
+    y, st = ssm_apply(cfg, p, x, state)
+    return y, st

@@ -1,0 +1,222 @@
+"""Decoder stack: block definitions, scan-over-layers forward, decode step.
+
+One generic block covers all assigned families:
+  * dense / moe / audio / vlm : pre-norm attention + (SwiGLU | MoE) FFN
+  * hybrid (hymba)            : attention and SSM heads run in PARALLEL on the
+                                same normed input, outputs averaged, then FFN
+  * ssm (rwkv6)               : RWKV time-mix + channel-mix (attention-free)
+
+Layers are stacked on a leading L axis and driven by ``lax.scan`` (one trace
+per unique block => small HLO, fast multi-arch dry-runs), with per-layer
+gradient checkpointing (remat) for training.
+"""
+from __future__ import annotations
+
+from typing import Any, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig
+from repro.distributed.sharding import shard
+from repro.models import attention as attn_lib
+from repro.models import moe as moe_lib
+from repro.models import rwkv6 as rwkv_lib
+from repro.models import ssm as ssm_lib
+from repro.models.layers import (embed_defs, embed_tokens, mlp_apply,
+                                 mlp_defs, rms_norm, unembed)
+from repro.models.params import ParamDef
+
+
+# ----------------------------------------------------------- definitions ----
+def block_defs(cfg: ArchConfig, dtype) -> dict:
+    d = cfg.d_model
+    out: dict[str, Any] = {
+        "ln1": ParamDef((d,), (None,), dtype, init="zeros"),
+        "ln2": ParamDef((d,), (None,), dtype, init="zeros"),
+    }
+    if cfg.rwkv:
+        out["rwkv"] = rwkv_lib.rwkv_defs(cfg, dtype)
+        return out
+    out["attn"] = attn_lib.attn_defs(cfg, dtype)
+    if cfg.ssm_state:
+        out["ssm"] = ssm_lib.ssm_defs(cfg, dtype)
+    if cfg.moe is not None:
+        out["moe"] = moe_lib.moe_defs(cfg, dtype)
+    else:
+        out["mlp"] = mlp_defs(cfg, dtype)
+    return out
+
+
+def stacked_defs(cfg: ArchConfig, dtype) -> dict:
+    """All model parameters; block leaves get a leading layer axis."""
+    blk = block_defs(cfg, dtype)
+
+    def add_layer_axis(p: ParamDef) -> ParamDef:
+        return ParamDef((cfg.n_layers,) + p.shape,
+                        (None,) + p.logical_axes, p.dtype, p.init, p.scale)
+
+    blocks = jax.tree_util.tree_map(
+        add_layer_axis, blk, is_leaf=lambda x: isinstance(x, ParamDef))
+    out = dict(embed_defs(cfg, dtype))
+    out["blocks"] = blocks
+    out["final_norm"] = ParamDef((cfg.d_model,), (None,), dtype, init="zeros")
+    return out
+
+
+# ------------------------------------------------------------- forward ------
+def _block_full(cfg: ArchConfig, p: dict, x: jax.Array, cos, sin,
+                decode_moe: bool = False) -> jax.Array:
+    """Full-sequence block (train / prefill)."""
+    h = rms_norm(x, p["ln1"], cfg.norm_eps)
+    if cfg.rwkv:
+        y, _, _ = rwkv_lib.time_mix(cfg, p["rwkv"], h, None)
+        x = x + y
+        h2 = rms_norm(x, p["ln2"], cfg.norm_eps)
+        y2, _ = rwkv_lib.channel_mix(cfg, p["rwkv"], h2, None)
+        return x + y2
+    y = attn_lib.attention(cfg, p["attn"], h, cos, sin)
+    if cfg.ssm_state:
+        y_ssm, _ = ssm_lib.ssm_apply(cfg, p["ssm"], h)
+        y = 0.5 * (y + y_ssm)            # hymba: parallel heads, averaged
+    x = x + y
+    h2 = rms_norm(x, p["ln2"], cfg.norm_eps)
+    if cfg.moe is not None:
+        y2 = moe_lib.moe_apply(cfg, p["moe"], h2, decode=decode_moe)
+    else:
+        y2 = mlp_apply(p["mlp"], h2)
+    return x + y2
+
+
+# Dry-run knob: lax.scan hides per-layer FLOPs from cost_analysis (the while
+# body is counted once). The dry-run sets this to the layer count to unroll
+# the stack so the compiled module exposes true whole-model FLOPs/bytes.
+SCAN_UNROLL = 1
+
+
+def forward(cfg: ArchConfig, params: dict, *, tokens=None, embeds=None,
+            remat: bool = True) -> jax.Array:
+    """Full-sequence forward to logits. tokens [B,S] or embeds [B,S,D]."""
+    if embeds is None:
+        x = embed_tokens(params, tokens)
+    else:
+        x = shard(embeds, "batch", None, None)
+    seq = x.shape[1]
+    x = x.astype(jnp.dtype(cfg.dtype))
+    cos = sin = None
+    if not cfg.rwkv:
+        cos, sin = attn_lib.make_rope(cfg, seq)
+
+    def body(carry, layer_params):
+        y = _block_full(cfg, layer_params, carry, cos, sin)
+        y = shard(y, "batch", None, None)
+        return y, None
+
+    if remat:
+        body = jax.checkpoint(body)
+    unroll = min(SCAN_UNROLL, cfg.n_layers) if SCAN_UNROLL else 1
+    x, _ = jax.lax.scan(body, x, params["blocks"], unroll=unroll)
+    x = rms_norm(x, params["final_norm"], cfg.norm_eps)
+    return unembed(cfg, params, x)
+
+
+def loss_fn(cfg: ArchConfig, params: dict, batch: dict,
+            remat: bool = True) -> tuple[jax.Array, dict]:
+    logits = forward(cfg, params,
+                     tokens=batch.get("tokens"),
+                     embeds=batch.get("embeds"), remat=remat)
+    labels = batch["labels"]
+    logits = logits.astype(jnp.float32)
+    lse = jax.nn.logsumexp(logits, axis=-1)
+    ll = jnp.take_along_axis(logits, labels[..., None],
+                             axis=-1)[..., 0]
+    mask = (labels >= 0).astype(jnp.float32)
+    nll = ((lse - ll) * mask).sum() / jnp.maximum(mask.sum(), 1.0)
+    return nll, {"loss": nll, "tokens": mask.sum()}
+
+
+# --------------------------------------------------------------- decode -----
+class DecodeState(NamedTuple):
+    cache: Any          # per-family pytree, leaves stacked [L, ...]
+    pos: jax.Array      # [] int32 absolute position
+
+
+def init_decode_state(cfg: ArchConfig, batch: int, max_len: int
+                      ) -> DecodeState:
+    dt = jnp.dtype(cfg.dtype)
+    l = cfg.n_layers
+
+    def stack(tree):
+        return jax.tree_util.tree_map(
+            lambda a: jnp.zeros((l,) + a.shape, a.dtype), tree)
+
+    cache: dict[str, Any] = {}
+    if cfg.rwkv:
+        cache["rwkv"] = stack(rwkv_lib.RWKVState(
+            s=jnp.zeros((batch, cfg.n_heads, cfg.head_dim, cfg.head_dim),
+                        jnp.float32),
+            prev_tm=jnp.zeros((batch, cfg.d_model), dt),
+            prev_cm=jnp.zeros((batch, cfg.d_model), dt)))
+    else:
+        kv = attn_lib.init_cache(cfg, batch, max_len, dt)
+        cache["kv"] = attn_lib.KVCache(
+            k=jnp.zeros((l,) + kv.k.shape, dt),
+            v=jnp.zeros((l,) + kv.v.shape, dt),
+            pos=jnp.zeros((l,), jnp.int32))
+        if cfg.ssm_state:
+            cache["ssm"] = stack(ssm_lib.SSMState(
+                h=jnp.zeros((batch, cfg.n_heads, cfg.head_dim,
+                             cfg.ssm_state), jnp.float32)))
+    return DecodeState(cache=cache, pos=jnp.zeros((), jnp.int32))
+
+
+def decode_step(cfg: ArchConfig, params: dict, state: DecodeState,
+                token: jax.Array, *, max_len: int,
+                embed_in: jax.Array | None = None
+                ) -> tuple[jax.Array, DecodeState]:
+    """One new token for every sequence. token: [B] int32 (or embed [B,D])."""
+    if embed_in is not None:
+        x = embed_in[:, None, :]
+    else:
+        x = embed_tokens(params, token[:, None])
+    x = x.astype(jnp.dtype(cfg.dtype))
+    pos = state.pos
+    cos_full = sin_full = None
+    if not cfg.rwkv:
+        cos_full, sin_full = attn_lib.make_rope(cfg, max_len)
+
+    def body(x, scanned):
+        layer_params, layer_cache = scanned
+        h = rms_norm(x, layer_params["ln1"], cfg.norm_eps)
+        new_cache = dict(layer_cache)
+        if cfg.rwkv:
+            rp, rc = layer_params["rwkv"], layer_cache["rwkv"]
+            y, s_new, last_tm = rwkv_lib.time_mix(cfg, rp, h, rc)
+            x = x + y
+            h2 = rms_norm(x, layer_params["ln2"], cfg.norm_eps)
+            y2, last_cm = rwkv_lib.channel_mix(cfg, rp, h2, rc)
+            x = x + y2
+            new_cache["rwkv"] = rwkv_lib.RWKVState(
+                s=s_new, prev_tm=last_tm, prev_cm=last_cm)
+            return x, new_cache
+        y, kv_new = attn_lib.decode_attention(
+            cfg, layer_params["attn"], h, layer_cache["kv"], pos,
+            cos_full, sin_full)
+        new_cache["kv"] = kv_new
+        if cfg.ssm_state:
+            y_ssm, ssm_new = ssm_lib.ssm_decode(
+                cfg, layer_params["ssm"], h, layer_cache["ssm"])
+            y = 0.5 * (y + y_ssm)
+            new_cache["ssm"] = ssm_new
+        x = x + y
+        h2 = rms_norm(x, layer_params["ln2"], cfg.norm_eps)
+        if cfg.moe is not None:
+            y2 = moe_lib.moe_apply(cfg, layer_params["moe"], h2, decode=True)
+        else:
+            y2 = mlp_apply(layer_params["mlp"], h2)
+        return x + y2, new_cache
+
+    x, new_cache = jax.lax.scan(body, x, (params["blocks"], state.cache))
+    x = rms_norm(x, params["final_norm"], cfg.norm_eps)
+    logits = unembed(cfg, params, x)[:, 0, :]
+    return logits, DecodeState(cache=new_cache, pos=pos + 1)

@@ -1,0 +1,6 @@
+from repro.optim import adamw, compression, schedules
+from repro.optim.consensus import (ConsensusConfig, ConsensusTrainer,
+                                   TrainState)
+
+__all__ = ["adamw", "compression", "schedules", "ConsensusConfig",
+           "ConsensusTrainer", "TrainState"]

@@ -1,0 +1,123 @@
+"""AdamW with optional Adafactor-style factored second moment.
+
+No optax in this container — built from scratch. The factored mode keeps the
+second moment as per-row/per-column statistics (rank-1 reconstruction) for
+matrices, cutting optimizer memory from 2x params to ~1x + eps; required to
+fit the 1T-param MoE on a single pod (DESIGN.md §5).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass(frozen=True)
+class AdamWConfig:
+    lr: float = 3e-4
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    grad_clip: float = 1.0
+    factored: bool = False          # Adafactor-style factored v
+    moment_dtype: Any = jnp.float32
+
+
+class AdamWState(NamedTuple):
+    step: jax.Array
+    m: Any
+    v: Any          # full v, or (v_row, v_col) tuples for factored matrices
+
+
+def _is_factorable(x) -> bool:
+    return x.ndim >= 2 and x.shape[-1] > 1 and x.shape[-2] > 1
+
+
+def init(cfg: AdamWConfig, params: Any) -> AdamWState:
+    m = jax.tree_util.tree_map(
+        lambda p: jnp.zeros(p.shape, cfg.moment_dtype), params)
+    if cfg.factored:
+        def init_v(p):
+            if _is_factorable(p):
+                return (jnp.zeros(p.shape[:-1], jnp.float32),
+                        jnp.zeros(p.shape[:-2] + p.shape[-1:], jnp.float32))
+            return jnp.zeros(p.shape, jnp.float32)
+        v = jax.tree_util.tree_map(init_v, params)
+    else:
+        v = jax.tree_util.tree_map(
+            lambda p: jnp.zeros(p.shape, cfg.moment_dtype), params)
+    return AdamWState(step=jnp.zeros((), jnp.int32), m=m, v=v)
+
+
+def global_norm(tree: Any) -> jax.Array:
+    return jnp.sqrt(sum(jnp.sum(jnp.square(x.astype(jnp.float32)))
+                        for x in jax.tree_util.tree_leaves(tree)))
+
+
+def update(cfg: AdamWConfig, state: AdamWState, params: Any, grads: Any,
+           lr_scale: jax.Array | float = 1.0
+           ) -> tuple[Any, AdamWState, dict]:
+    step = state.step + 1
+    gnorm = global_norm(grads)
+    clip = jnp.minimum(1.0, cfg.grad_clip / (gnorm + 1e-9)) \
+        if cfg.grad_clip > 0 else 1.0
+    bc1 = 1.0 - cfg.b1 ** step.astype(jnp.float32)
+    bc2 = 1.0 - cfg.b2 ** step.astype(jnp.float32)
+    lr = cfg.lr * lr_scale
+
+    def upd(p, g, m, v):
+        g = g.astype(jnp.float32) * clip
+        m_new = cfg.b1 * m.astype(jnp.float32) + (1 - cfg.b1) * g
+        if isinstance(v, tuple):                       # factored second moment
+            v_row, v_col = v
+            g2 = g * g + 1e-30
+            v_row = cfg.b2 * v_row + (1 - cfg.b2) * g2.mean(axis=-1)
+            v_col = cfg.b2 * v_col + (1 - cfg.b2) * g2.mean(axis=-2)
+            # rank-1 reconstruction: v ~ row x col / mean(row)
+            denom = jnp.maximum(v_row.mean(axis=-1, keepdims=True), 1e-30)
+            v_hat = (v_row[..., None] * v_col[..., None, :]
+                     / denom[..., None])
+            v_out = (v_row, v_col)
+        else:
+            v_hat = cfg.b2 * v.astype(jnp.float32) + (1 - cfg.b2) * g * g
+            v_out = v_hat.astype(v.dtype)
+        upd_dir = (m_new / bc1) / (jnp.sqrt(v_hat / bc2) + cfg.eps)
+        p_new = p.astype(jnp.float32) - lr * (upd_dir
+                                              + cfg.weight_decay
+                                              * p.astype(jnp.float32))
+        return p_new.astype(p.dtype), m_new.astype(m.dtype), v_out
+
+    flat_p, tdef = jax.tree_util.tree_flatten(params)
+    flat_g = tdef.flatten_up_to(grads)
+    flat_m = tdef.flatten_up_to(state.m)
+    flat_v = tdef.flatten_up_to(state.v)
+    out = [upd(p, g, m, v) for p, g, m, v in
+           zip(flat_p, flat_g, flat_m, flat_v)]
+    new_p = tdef.unflatten([o[0] for o in out])
+    new_m = tdef.unflatten([o[1] for o in out])
+    new_v = tdef.unflatten([o[2] for o in out])
+    metrics = {"grad_norm": gnorm, "lr": lr}
+    return new_p, AdamWState(step=step, m=new_m, v=new_v), metrics
+
+
+def abstract_state(cfg: AdamWConfig, abstract_params: Any) -> AdamWState:
+    """ShapeDtypeStruct mirror of init() for the dry-run."""
+    m = jax.tree_util.tree_map(
+        lambda p: jax.ShapeDtypeStruct(p.shape, cfg.moment_dtype),
+        abstract_params)
+    if cfg.factored:
+        def av(p):
+            if len(p.shape) >= 2 and p.shape[-1] > 1 and p.shape[-2] > 1:
+                return (jax.ShapeDtypeStruct(p.shape[:-1], jnp.float32),
+                        jax.ShapeDtypeStruct(p.shape[:-2] + p.shape[-1:],
+                                             jnp.float32))
+            return jax.ShapeDtypeStruct(p.shape, jnp.float32)
+        v = jax.tree_util.tree_map(av, abstract_params)
+    else:
+        v = jax.tree_util.tree_map(
+            lambda p: jax.ShapeDtypeStruct(p.shape, cfg.moment_dtype),
+            abstract_params)
+    return AdamWState(step=jax.ShapeDtypeStruct((), jnp.int32), m=m, v=v)

@@ -1,0 +1,80 @@
+"""Gradient/parameter-delta compression for the consensus exchange.
+
+Cross-pod (DCN) bandwidth is the scarce resource in multi-pod consensus
+training. Two standard schemes, both with error feedback so the consensus
+dual absorbs quantization error instead of accumulating bias:
+
+  * int8  — per-tensor absmax scaling (8x reduction over f32, 2x over bf16)
+  * topk  — magnitude top-k with error-feedback residual (k as a fraction)
+
+Both operate leaf-wise on pytrees and are pure-jnp (usable inside shard_map).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass(frozen=True)
+class CompressionConfig:
+    kind: str = "none"            # none | int8 | topk
+    topk_frac: float = 0.05
+
+
+def init_error(params: Any) -> Any:
+    return jax.tree_util.tree_map(
+        lambda p: jnp.zeros(p.shape, jnp.float32), params)
+
+
+def compress_int8(x: jax.Array) -> tuple[jax.Array, jax.Array]:
+    scale = jnp.maximum(jnp.abs(x).max(), 1e-12) / 127.0
+    q = jnp.clip(jnp.round(x / scale), -127, 127).astype(jnp.int8)
+    return q, scale
+
+
+def decompress_int8(q: jax.Array, scale: jax.Array) -> jax.Array:
+    return q.astype(jnp.float32) * scale
+
+
+def topk_mask(x: jax.Array, frac: float) -> jax.Array:
+    flat = jnp.abs(x.reshape(-1))
+    k = max(1, int(flat.shape[0] * frac))
+    thresh = jax.lax.top_k(flat, k)[0][-1]
+    return (jnp.abs(x) >= thresh).astype(x.dtype)
+
+
+def encode(cfg: CompressionConfig, delta: Any, error: Any
+           ) -> tuple[Any, Any, dict]:
+    """Returns (transmitted delta, new error-feedback state, stats)."""
+    if cfg.kind == "none":
+        return delta, error, {"compression_ratio": 1.0}
+
+    sent_bits = 0
+    raw_bits = 0
+
+    def leaf(d, e):
+        nonlocal sent_bits, raw_bits
+        d = d.astype(jnp.float32) + e                   # apply carried error
+        raw_bits += d.size * 32
+        if cfg.kind == "int8":
+            q, scale = compress_int8(d)
+            sent = decompress_int8(q, scale)
+            sent_bits += d.size * 8 + 32
+        elif cfg.kind == "topk":
+            mask = topk_mask(d, cfg.topk_frac)
+            sent = d * mask
+            sent_bits += int(d.size * cfg.topk_frac) * (32 + 32)
+        else:
+            raise ValueError(cfg.kind)
+        return sent, d - sent                            # new error residual
+
+    flat_d, tdef = jax.tree_util.tree_flatten(delta)
+    flat_e = tdef.flatten_up_to(error)
+    out = [leaf(d, e) for d, e in zip(flat_d, flat_e)]
+    sent_tree = tdef.unflatten([o[0] for o in out])
+    err_tree = tdef.unflatten([o[1] for o in out])
+    ratio = raw_bits / max(sent_bits, 1)
+    return sent_tree, err_tree, {"compression_ratio": ratio}

@@ -1,0 +1,22 @@
+"""Learning-rate schedules (pure functions of the step)."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def warmup_cosine(step, *, warmup: int, total: int, floor: float = 0.1):
+    step = jnp.asarray(step, jnp.float32)
+    warm = jnp.minimum(step / jnp.maximum(warmup, 1), 1.0)
+    frac = jnp.clip((step - warmup) / jnp.maximum(total - warmup, 1), 0.0, 1.0)
+    cos = floor + (1.0 - floor) * 0.5 * (1.0 + jnp.cos(jnp.pi * frac))
+    return warm * cos
+
+
+def constant(step, *, value: float = 1.0):
+    del step
+    return value
+
+
+def rsqrt(step, *, warmup: int):
+    step = jnp.asarray(step, jnp.float32) + 1.0
+    return jnp.minimum(step / warmup, jnp.sqrt(warmup / step))

@@ -1,0 +1,217 @@
+"""Distributed PPCA (Yoon & Pavlovic, NIPS'12) with the paper's adaptive
+penalty schedules — the faithful reproduction of §4 / Algorithm 1.
+
+Every node i holds local observations X_i [N_i, D] and local parameters
+Theta_i = {W_i, mu_i, a_i}; consensus constraints tie the parameters across
+the communication graph. One ADMM iteration (Algorithm 1):
+
+  1. E-step (local, same as centralized PPCA)
+  2. M-step with consensus terms (eq. 15 and its W/a analogues)
+  3. broadcast Theta_i to neighbors
+  4. dual updates  Lam_i += 1/2 sum_j eta_ij (W_i - W_j)  (and gamma, beta)
+  5. penalty update eta_ij / budget T_ij via the configured scheme (eq. 4–12)
+
+Single-host reproduction layout: all node states stacked on a leading J axis
+and the per-node math vmapped; neighbor reductions are masked matmuls with
+the dense adjacency. This mirrors exactly what the sharded trainer does on a
+mesh, with the node axis mapped onto devices instead.
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import residuals as res_lib
+from repro.core.graph import Graph
+from repro.core.penalty import (PenaltyConfig, PenaltyState,
+                                init_penalty_state, update_penalty)
+from repro.ppca import ppca as cp
+
+
+class DPPCAState(NamedTuple):
+    W: jax.Array          # [J, D, M]
+    mu: jax.Array         # [J, D]
+    a: jax.Array          # [J]
+    Lam: jax.Array        # [J, D, M]  multiplier for W
+    gam: jax.Array        # [J, D]     multiplier for mu
+    bet: jax.Array        # [J]        multiplier for a
+    theta_bar: dict       # previous neighbor means (for eq. 5 dual residual)
+    penalty: PenaltyState
+    t: jax.Array
+
+
+@dataclasses.dataclass(frozen=True, eq=False)
+class DPPCA:
+    """D-PPCA with configurable penalty schedule."""
+
+    latent_dim: int
+    graph: Graph
+    penalty_cfg: PenaltyConfig
+    probe_midpoint: bool = False   # §3.2: probe at rho_ij instead of theta_j
+
+    # ------------------------------------------------------------------ init
+    def init(self, key: jax.Array, x: jax.Array) -> DPPCAState:
+        """x: [J, N_i, D] local observations (evenly split)."""
+        j, _, d = x.shape
+        m = self.latent_dim
+        keys = jax.random.split(key, j)
+        W = jax.vmap(lambda k: jax.random.normal(k, (d, m)))(keys)
+        mu = x.mean(axis=1)
+        a = jnp.ones((j,), x.dtype)
+        theta = {"W": W, "mu": mu, "a": a}
+        bar = res_lib.neighbor_mean(theta, jnp.asarray(self.graph.adj))
+        return DPPCAState(
+            W=W.astype(x.dtype), mu=mu, a=a,
+            Lam=jnp.zeros_like(W), gam=jnp.zeros_like(mu),
+            bet=jnp.zeros_like(a), theta_bar=bar,
+            penalty=init_penalty_state(self.penalty_cfg, j, x.dtype),
+            t=jnp.zeros((), jnp.int32))
+
+    # ------------------------------------------------------------- iteration
+    @partial(jax.jit, static_argnums=0)
+    def step(self, state: DPPCAState, x: jax.Array
+             ) -> tuple[DPPCAState, dict]:
+        j, n_i, d = x.shape
+        m = self.latent_dim
+        adj = jnp.asarray(self.graph.adj)
+        adj_f = adj.astype(x.dtype)
+        eta = state.penalty.eta * adj_f              # zero off-edges
+        eta_sum = eta.sum(axis=1)                    # [J] sum_j eta_ij
+
+        # ---- (1) E-step, vmapped over nodes --------------------------------
+        params = jax.vmap(cp.PPCAParams)(state.W, state.mu, state.a)
+        stats = jax.vmap(cp.e_step)(params, x)
+
+        # ---- (2) M-step with consensus -------------------------------------
+        # W update:  [a_i sum_n xc Ez^T - 2 Lam_i + sum_j eta_ij (W_i + W_j)]
+        #            [a_i sum_n Ezz + 2 sum_j eta_ij I]^{-1}
+        nbr_W = jnp.einsum("ij,jdm->idm", eta, state.W)       # sum_j eta W_j
+        own_W = eta_sum[:, None, None] * state.W              # sum_j eta W_i
+
+        def w_update(x_i, mu_i, a_i, Ez, Ezz, Lam_i, pull, es):
+            xc = x_i - mu_i[None]
+            num = a_i * (xc.T @ Ez) - 2.0 * Lam_i + pull       # [D, M]
+            den = a_i * Ezz.sum(0) + 2.0 * es * jnp.eye(m, dtype=x_i.dtype)
+            return jnp.linalg.solve(den, num.T).T
+
+        W_new = jax.vmap(w_update)(x, state.mu, state.a, stats.Ez, stats.Ezz,
+                                   state.Lam, nbr_W + own_W, eta_sum)
+
+        # mu update (paper eq. 15)
+        nbr_mu = eta @ state.mu                               # [J, D]
+        own_mu = eta_sum[:, None] * state.mu
+
+        def mu_update(x_i, W_i, a_i, Ez, gam_i, pull, es):
+            num = a_i * jnp.sum(x_i - Ez @ W_i.T, axis=0) - 2.0 * gam_i + pull
+            return num / (n_i * a_i + 2.0 * es)
+
+        mu_new = jax.vmap(mu_update)(x, W_new, state.a, stats.Ez, state.gam,
+                                     nbr_mu + own_mu, eta_sum)
+
+        # a update: positive root of
+        #   4*es*a^2 + (s_i + 4 bet_i - 2 sum_j eta_ij(a_i + a_j)) a - N D = 0
+        nbr_a = eta @ state.a + eta_sum * state.a             # [J]
+
+        def a_update(x_i, W_i, mu_i, Ez, Ezz, bet_i, pull, es):
+            xc = x_i - mu_i[None]
+            s = (jnp.sum(xc * xc) - 2.0 * jnp.sum((xc @ W_i) * Ez)
+                 + jnp.sum(Ezz * (W_i.T @ W_i)[None]))
+            b = s + 4.0 * bet_i - 2.0 * pull
+            c2 = 4.0 * es
+            nd = jnp.asarray(n_i * d, x_i.dtype)
+            root = (-b + jnp.sqrt(b * b + 4.0 * c2 * nd)) / (2.0 * c2 + 1e-30)
+            no_consensus = nd / jnp.maximum(b, 1e-12)  # es == 0 fallback
+            a = jnp.where(c2 > 1e-12, root, no_consensus)
+            return jnp.maximum(a, 1e-8)
+
+        a_new = jax.vmap(a_update)(x, W_new, mu_new, stats.Ez, stats.Ezz,
+                                   state.bet, nbr_a, eta_sum)
+
+        # ---- (3)+(4) broadcast & dual updates -------------------------------
+        # Dual updates use the SYMMETRIZED per-edge penalty. With directed
+        # eta_ij != eta_ji the raw update breaks the sum_i lambda_i = 0
+        # invariant, tilting (and for the precision, unbounding) the fixed
+        # point. Symmetric duals + directed primal pulls keep the paper's
+        # directed-edge adaptivity while preserving the invariant that its
+        # convergence argument (Remark 4.2 of [10]) relies on. DESIGN.md §7.
+        eta_sym = 0.5 * (eta + eta.T)
+
+        def dual(mult, th):
+            flat = th.reshape(j, -1)
+            diff = eta_sym.sum(1)[:, None] * flat - eta_sym @ flat
+            return mult + 0.5 * diff.reshape(th.shape)
+
+        Lam_new = dual(state.Lam, W_new)
+        gam_new = dual(state.gam, mu_new)
+        bet_new = dual(state.bet[:, None], a_new[:, None])[:, 0]
+
+        # ---- residuals (eq. 5) over the full parameter pytree ---------------
+        theta = {"W": W_new, "mu": mu_new, "a": a_new}
+        eta_node = res_lib.node_eta(state.penalty.eta, adj)
+        rr = res_lib.local_residuals(theta, state.theta_bar, adj, eta_node)
+
+        # ---- (5) penalty update ---------------------------------------------
+        params_new = jax.vmap(cp.PPCAParams)(W_new, mu_new, a_new)
+        f_self = jax.vmap(cp.nll)(params_new, x)
+
+        f_nbr = None
+        if self.penalty_cfg.uses_objective_probes:
+            def probe_row(x_i, W_i, mu_i, a_i):
+                def at(W_j, mu_j, a_j):
+                    if self.probe_midpoint:
+                        W_j = 0.5 * (W_i + W_j)
+                        mu_j = 0.5 * (mu_i + mu_j)
+                        a_j = 0.5 * (a_i + a_j)
+                    return cp.nll(cp.PPCAParams(W_j, mu_j, a_j), x_i)
+                return jax.vmap(at)(W_new, mu_new, a_new)
+
+            f_nbr = jax.vmap(probe_row)(x, W_new, mu_new, a_new)
+
+        penalty_new = update_penalty(
+            self.penalty_cfg, state.penalty, adj=adj, f_self=f_self,
+            f_nbr=f_nbr, r_norm=rr.r_norm, s_norm=rr.s_norm)
+
+        new_state = DPPCAState(
+            W=W_new, mu=mu_new, a=a_new, Lam=Lam_new, gam=gam_new,
+            bet=bet_new, theta_bar=rr.theta_bar, penalty=penalty_new,
+            t=state.t + 1)
+        metrics = {
+            "objective": f_self.sum(),
+            "f_self": f_self,
+            "r_max": rr.r_norm.max(),
+            "s_max": rr.s_norm.max(),
+            "eta_mean": res_lib.node_eta(penalty_new.eta, adj).mean(),
+        }
+        return new_state, metrics
+
+    # ------------------------------------------------------------------- run
+    def run(self, state: DPPCAState, x: jax.Array, *, max_iters: int = 1000,
+            rel_tol: float = 1e-3, min_iters: int = 5
+            ) -> tuple[DPPCAState, dict]:
+        """Paper §5 criterion: relative change of the total objective < tol."""
+        hist = {"objective": [], "r_max": [], "eta_mean": []}
+        prev = None
+        iters = max_iters
+        for it in range(max_iters):
+            state, mtr = self.step(state, x)
+            obj = float(mtr["objective"])
+            hist["objective"].append(obj)
+            hist["r_max"].append(float(mtr["r_max"]))
+            hist["eta_mean"].append(float(mtr["eta_mean"]))
+            if prev is not None and it + 1 >= min_iters:
+                if abs(obj - prev) / (abs(prev) + 1e-12) < rel_tol:
+                    iters = it + 1
+                    break
+            prev = obj
+        hist["iterations"] = iters
+        return state, hist
+
+
+def max_subspace_angle(W_nodes: jax.Array, W_ref: jax.Array) -> jax.Array:
+    """Paper metric: max over nodes of the largest principal angle (degrees)."""
+    angles = jax.vmap(lambda w: cp.subspace_angle(w, W_ref))(W_nodes)
+    return jnp.rad2deg(angles.max())

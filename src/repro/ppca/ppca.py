@@ -1,0 +1,118 @@
+"""Centralized Probabilistic PCA (Tipping & Bishop, 1999) — EM + closed form.
+
+The model:  x = W z + mu + eps,   z ~ N(0, I_M),  eps ~ N(0, a^{-1} I_D)
+with noise *precision* a (the paper's convention, §4.1).
+
+Used as (a) the local solver inside D-PPCA's M-step structure, (b) the
+centralized baseline/ground-truth generator for the reproduction experiments,
+and (c) the oracle for unit tests.
+"""
+from __future__ import annotations
+
+from functools import partial
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+
+class PPCAParams(NamedTuple):
+    W: jax.Array    # [D, M] projection
+    mu: jax.Array   # [D]    mean
+    a: jax.Array    # []     noise precision (1/sigma^2)
+
+
+class EStats(NamedTuple):
+    Ez: jax.Array     # [N, M]     posterior means  E[z_n]
+    Ezz: jax.Array    # [N, M, M]  posterior second moments E[z_n z_n^T]
+
+
+def init_params(key: jax.Array, d: int, m: int,
+                dtype=jnp.float32) -> PPCAParams:
+    kw, _ = jax.random.split(key)
+    return PPCAParams(W=jax.random.normal(kw, (d, m), dtype),
+                      mu=jnp.zeros((d,), dtype),
+                      a=jnp.asarray(1.0, dtype))
+
+
+def e_step(params: PPCAParams, x: jax.Array) -> EStats:
+    """Posterior stats (paper eq. 13): M = W^T W + a^{-1} I."""
+    W, mu, a = params
+    m = W.shape[1]
+    Mmat = W.T @ W + jnp.eye(m, dtype=W.dtype) / a
+    Minv = jnp.linalg.inv(Mmat)
+    xc = x - mu[None, :]
+    Ez = xc @ W @ Minv.T                              # [N, M]
+    Ezz = Minv / a + Ez[:, :, None] * Ez[:, None, :]  # [N, M, M]
+    return EStats(Ez=Ez, Ezz=Ezz)
+
+
+def m_step(stats: EStats, x: jax.Array, params: PPCAParams) -> PPCAParams:
+    """Standard (unconstrained) M-step."""
+    Ez, Ezz = stats
+    n, d = x.shape
+    mu = jnp.mean(x - Ez @ params.W.T, axis=0)
+    xc = x - mu[None, :]
+    W = jnp.linalg.solve(Ezz.sum(0), (xc.T @ Ez).T).T          # [D, M]
+    s = (jnp.sum(xc * xc)
+         - 2.0 * jnp.sum((xc @ W) * Ez)
+         + jnp.sum(Ezz * (W.T @ W)[None]))
+    a = (n * d) / jnp.maximum(s, 1e-12)
+    return PPCAParams(W=W, mu=mu, a=a)
+
+
+def nll(params: PPCAParams, x: jax.Array) -> jax.Array:
+    """Exact negative log-likelihood under C = W W^T + a^{-1} I.
+
+    Uses the Woodbury/determinant-lemma forms so cost is O(N D M + M^3),
+    stable for D up to thousands (the SfM transposed layout has D = #points).
+    """
+    W, mu, a = params
+    n, d = x.shape
+    m = W.shape[1]
+    eye_m = jnp.eye(m, dtype=W.dtype)
+    Mmat = W.T @ W + eye_m / a                    # [M, M]
+    # log|C| = -D log a + log|I + a W^T W| = -(D-M) log a + log|M_mat| ... :
+    #   |C| = a^{-(D-M)} |W^T W + a^{-1} I|
+    sign, logdet_M = jnp.linalg.slogdet(Mmat)
+    logdet_C = -(d - m) * jnp.log(a) + logdet_M
+    xc = x - mu[None, :]
+    # tr(C^{-1} S_total):  C^{-1} = a (I - W Mmat^{-1} W^T)
+    xW = xc @ W                                    # [N, M]
+    sol = jnp.linalg.solve(Mmat, xW.T).T           # [N, M]
+    quad = a * (jnp.sum(xc * xc) - jnp.sum(xW * sol))
+    return 0.5 * (n * d * jnp.log(2.0 * jnp.pi) + n * logdet_C + quad)
+
+
+@partial(jax.jit, static_argnames=("max_iters",))
+def fit_em(params: PPCAParams, x: jax.Array, max_iters: int = 200
+           ) -> tuple[PPCAParams, jax.Array]:
+    """Plain EM to convergence-ish (fixed iteration budget, jit-scanned)."""
+
+    def body(p, _):
+        p = m_step(e_step(p, x), x, p)
+        return p, nll(p, x)
+
+    params, trace = jax.lax.scan(body, params, None, length=max_iters)
+    return params, trace
+
+
+def fit_svd(x: jax.Array, m: int) -> PPCAParams:
+    """Closed-form ML solution (Tipping & Bishop Thm): the global optimum."""
+    n, d = x.shape
+    mu = x.mean(0)
+    xc = x - mu[None]
+    # economy SVD of the centered data
+    _, s, vt = jnp.linalg.svd(xc, full_matrices=False)
+    evals = (s * s) / n                             # eigenvalues of S
+    sigma2 = jnp.sum(evals[m:]) / jnp.maximum(d - m, 1)
+    W = vt[:m].T * jnp.sqrt(jnp.maximum(evals[:m] - sigma2, 0.0))[None, :]
+    return PPCAParams(W=W, mu=mu, a=1.0 / jnp.maximum(sigma2, 1e-12))
+
+
+def subspace_angle(Wa: jax.Array, Wb: jax.Array) -> jax.Array:
+    """Largest principal angle (radians) between span(Wa) and span(Wb)."""
+    qa, _ = jnp.linalg.qr(Wa)
+    qb, _ = jnp.linalg.qr(Wb)
+    s = jnp.linalg.svd(qa.T @ qb, compute_uv=False)
+    return jnp.arccos(jnp.clip(jnp.min(s), -1.0, 1.0))

@@ -1,0 +1,6 @@
+from repro.runtime.fault_tolerance import (ElasticController, RetryPolicy,
+                                           StragglerMonitor,
+                                           shrink_penalty_state, with_retries)
+
+__all__ = ["ElasticController", "RetryPolicy", "StragglerMonitor",
+           "shrink_penalty_state", "with_retries"]

@@ -1,0 +1,136 @@
+"""Runtime fault tolerance: retries, straggler detection, elastic rescale.
+
+A unique property of consensus-ADMM training (vs. a global all-reduce): the
+optimizer *tolerates a missing neighbor* — dropping an edge or a node leaves
+a smaller but still-valid consensus problem. The elastic path below exploits
+exactly that: on node failure we shrink the graph (``core.graph.drop_node``),
+remap the surviving eta/budget edges, and keep training; a synchronous-DP
+framework would have to abort the step.
+
+Wall-clock monitoring is injectable (``clock``) so straggler logic is unit-
+testable on CPU without real slow hosts.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Any, Callable
+
+import numpy as np
+
+from repro.core.graph import Graph, drop_node
+from repro.core.penalty import PenaltyState
+
+
+@dataclasses.dataclass
+class RetryPolicy:
+    max_retries: int = 3
+    backoff_s: float = 0.5
+    backoff_mult: float = 2.0
+    retryable: tuple = (RuntimeError, OSError)
+
+
+def with_retries(fn: Callable, policy: RetryPolicy,
+                 *, on_retry: Callable[[int, Exception], None] | None = None,
+                 sleep: Callable[[float], None] = time.sleep):
+    """Wrap a step function in bounded retry-with-backoff."""
+    def wrapped(*args, **kwargs):
+        delay = policy.backoff_s
+        for attempt in range(policy.max_retries + 1):
+            try:
+                return fn(*args, **kwargs)
+            except policy.retryable as e:
+                if attempt == policy.max_retries:
+                    raise
+                if on_retry is not None:
+                    on_retry(attempt, e)
+                sleep(delay)
+                delay *= policy.backoff_mult
+        raise AssertionError("unreachable")
+    return wrapped
+
+
+class StragglerMonitor:
+    """EMA step-time tracker with outlier flagging per node.
+
+    In a real deployment each host reports its step wall time; here the
+    ``observe`` call takes the per-node durations (tests inject synthetic
+    delays). A node whose EMA exceeds ``threshold`` x the fleet median is
+    flagged; the caller decides between (a) dropping its edges for the next
+    consensus round and (b) a full elastic rescale.
+    """
+
+    def __init__(self, num_nodes: int, *, alpha: float = 0.3,
+                 threshold: float = 2.0, patience: int = 3):
+        self.ema = np.zeros(num_nodes)
+        self.alpha = alpha
+        self.threshold = threshold
+        self.patience = patience
+        self.strikes = np.zeros(num_nodes, dtype=int)
+        self._initialized = False
+
+    def observe(self, durations: np.ndarray) -> list[int]:
+        durations = np.asarray(durations, dtype=float)
+        if not self._initialized:
+            self.ema = durations.copy()
+            self._initialized = True
+        else:
+            self.ema = (1 - self.alpha) * self.ema + self.alpha * durations
+        med = float(np.median(self.ema))
+        slow = self.ema > self.threshold * max(med, 1e-9)
+        self.strikes = np.where(slow, self.strikes + 1, 0)
+        return [int(i) for i in np.nonzero(
+            self.strikes >= self.patience)[0]]
+
+
+def shrink_penalty_state(state: PenaltyState, victim: int) -> PenaltyState:
+    """Remove a node's rows/cols from the [J, J] penalty state.
+
+    Surviving edges keep their eta / spent budget / top-up counters — the
+    adaptation history is preserved across the rescale.
+    """
+    import jax.numpy as jnp
+    keep = jnp.asarray([i for i in range(state.eta.shape[0]) if i != victim])
+
+    def cut(x):
+        if x.ndim == 2:
+            return x[jnp.ix_(keep, keep)]
+        if x.ndim == 1:
+            return x[keep]
+        return x
+
+    return PenaltyState(eta=cut(state.eta), cum_tau=cut(state.cum_tau),
+                        budget=cut(state.budget), n_incr=cut(state.n_incr),
+                        f_prev=cut(state.f_prev), t=state.t)
+
+
+@dataclasses.dataclass
+class ElasticEvent:
+    step: int
+    victim: int
+    old_nodes: int
+    new_nodes: int
+
+
+class ElasticController:
+    """Drives graph + penalty-state rescale when a node is lost.
+
+    The parameter/optimizer state handling (re-sharding [J, ...] arrays to
+    [J-1, ...]) is the launcher's job — on a real fleet this is a restart
+    from the latest checkpoint into the smaller mesh; the controller decides
+    *what the new consensus problem is*.
+    """
+
+    def __init__(self, graph: Graph):
+        self.graph = graph
+        self.events: list[ElasticEvent] = []
+
+    def drop(self, victim: int, penalty: PenaltyState, step: int
+             ) -> tuple[Graph, PenaltyState]:
+        old = self.graph.num_nodes
+        self.graph = drop_node(self.graph, victim)
+        new_pen = shrink_penalty_state(penalty, victim)
+        self.events.append(ElasticEvent(step=step, victim=victim,
+                                        old_nodes=old,
+                                        new_nodes=self.graph.num_nodes))
+        return self.graph, new_pen

@@ -1,0 +1,28 @@
+"""Mini property-based testing helper (offline stand-in for `hypothesis`).
+
+Draws cases from seeded strategies and reports the failing seed/case. No
+shrinking, but the failing draw is fully reproducible from the printed seed.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+
+def sweep(fn, *, cases: int = 20, seed: int = 0):
+    """Run ``fn(rng, case_index)`` for ``cases`` independent seeded draws."""
+    for i in range(cases):
+        rng = np.random.default_rng(seed * 10_000 + i)
+        try:
+            fn(rng, i)
+        except AssertionError as e:  # pragma: no cover
+            raise AssertionError(
+                f"property failed at case {i} (seed {seed * 10_000 + i}): {e}"
+            ) from e
+
+
+def draw_shape(rng, *, min_dim=1, max_dim=64, ndims=2) -> tuple[int, ...]:
+    return tuple(int(rng.integers(min_dim, max_dim + 1)) for _ in range(ndims))
+
+
+def draw_topology(rng, j: int) -> str:
+    return str(rng.choice(["complete", "ring", "cluster", "chain", "star"]))

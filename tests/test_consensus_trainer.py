@@ -1,0 +1,119 @@
+"""Integration tests for the consensus-ADMM distributed trainer.
+
+Run on 8 fake CPU devices (set in conftest-free fashion: these tests spawn
+subprocesses? No — the device count must be set before jax init, so this
+module is SKIPPED unless the harness exported the flag; tests/conftest.py
+does NOT set it globally per the dry-run spec. A dedicated pytest plugin
+spawns one subprocess for this module instead).
+"""
+import json
+import os
+import subprocess
+import sys
+
+import pytest
+
+ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+_SCRIPT = r"""
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+import json
+import jax, jax.numpy as jnp, numpy as np
+from repro.configs import get_reduced_config
+from repro.models import build_model
+from repro.optim import ConsensusConfig, ConsensusTrainer
+from repro.optim.adamw import AdamWConfig
+from repro.core.penalty import PenaltyConfig
+from repro.data import DataConfig, SyntheticTokens
+
+out = {}
+mesh = jax.make_mesh((2,2,2), ("pod","data","model"),
+                     axis_types=(jax.sharding.AxisType.Auto,)*3)
+
+# --- dense arch: loss decreases, consensus keeps replicas close ---------
+cfg = get_reduced_config("qwen3-4b")
+model = build_model(cfg)
+tr = ConsensusTrainer(model, mesh, adamw=AdamWConfig(lr=1e-2),
+                      consensus=ConsensusConfig(
+                          penalty=PenaltyConfig(scheme="nap", eta0=0.1),
+                          topology="ring", local_steps=2))
+state = tr.init_state(jax.random.PRNGKey(0))
+data = SyntheticTokens(DataConfig(vocab=cfg.vocab, seq_len=32,
+                                  batch_per_node=4, num_nodes=2))
+train = jax.jit(tr.train_step)
+cons = jax.jit(tr.consensus_step)
+losses, rs = [], []
+for step in range(10):
+    state, m = train(state, data.batch(step))
+    losses.append(float(m["loss"]))
+    if tr.should_sync(step):
+        state, cm = cons(state, data.batch(step, probe=True))
+        rs.append(float(cm["r_max"]))
+out["losses"] = losses
+out["r_norms"] = rs
+p0 = jax.tree_util.tree_leaves(state.params)[0]
+out["node_divergence"] = float(jnp.abs(p0[0] - p0[1]).max())
+out["eta"] = np.asarray(state.penalty.eta).tolist()
+
+# --- compression path compiles and runs ---------------------------------
+tr2 = ConsensusTrainer(model, mesh, adamw=AdamWConfig(lr=1e-2),
+                       consensus=ConsensusConfig(
+                           penalty=PenaltyConfig(scheme="vp", eta0=0.1),
+                           topology="ring", local_steps=2,
+                           compression="int8"))
+st2 = tr2.init_state(jax.random.PRNGKey(1))
+st2, _ = jax.jit(tr2.train_step)(st2, data.batch(0))
+st2, cm2 = jax.jit(tr2.consensus_step)(st2, data.batch(0, probe=True))
+out["int8_r"] = float(cm2["r_max"])
+
+# --- fused Pallas consensus kernel path ----------------------------------
+tr3 = ConsensusTrainer(model, mesh, adamw=AdamWConfig(lr=1e-2),
+                       consensus=ConsensusConfig(
+                           penalty=PenaltyConfig(scheme="ap", eta0=0.1),
+                           topology="ring", local_steps=2,
+                           use_fused_kernel=False))
+st3 = tr3.init_state(jax.random.PRNGKey(2))
+st3, cm3 = jax.jit(tr3.consensus_step)(st3, data.batch(0, probe=True))
+out["ap_eta_mean"] = float(cm3["eta_mean"])
+
+print("RESULT " + json.dumps(out))
+"""
+
+
+@pytest.fixture(scope="module")
+def trainer_results():
+    env = dict(os.environ)
+    env["PYTHONPATH"] = os.path.join(ROOT, "src")
+    proc = subprocess.run([sys.executable, "-c", _SCRIPT], env=env,
+                          capture_output=True, text=True, timeout=1200)
+    assert proc.returncode == 0, proc.stderr[-3000:]
+    line = [ln for ln in proc.stdout.splitlines()
+            if ln.startswith("RESULT ")][-1]
+    return json.loads(line[len("RESULT "):])
+
+
+def test_loss_decreases(trainer_results):
+    losses = trainer_results["losses"]
+    assert losses[-1] < losses[0] * 0.9, losses
+
+
+def test_consensus_bounds_divergence(trainer_results):
+    # H=2 local steps between rounds: replicas drift but stay bounded
+    assert trainer_results["node_divergence"] < 1.0
+
+
+def test_penalties_adapted(trainer_results):
+    import numpy as np
+    eta = np.asarray(trainer_results["eta"])
+    assert eta.shape == (2, 2)
+    assert np.all(np.isfinite(eta)) and np.all(eta > 0)
+
+
+def test_compressed_exchange_runs(trainer_results):
+    assert trainer_results["int8_r"] >= 0.0
+
+
+def test_ap_scheme_bounded_eta(trainer_results):
+    # eq.(6): eta in [eta0/2, 2 eta0]
+    assert 0.05 - 1e-6 <= trainer_results["ap_eta_mean"] <= 0.2 + 1e-6

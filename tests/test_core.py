@@ -1,0 +1,276 @@
+"""Unit + property tests for the core ADMM engine (graphs, penalties, ADMM)."""
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.core import (ConsensusADMM, PenaltyConfig, SCHEMES, build_graph,
+                        compute_tau, consensus_error, drop_node,
+                        init_penalty_state, local_residuals, neighbor_mean,
+                        node_eta, update_penalty)
+
+from proptest import sweep, draw_topology
+
+
+# ------------------------------------------------------------------ graphs
+@pytest.mark.parametrize("topo", ["complete", "ring", "cluster", "star",
+                                  "chain", "expander"])
+@pytest.mark.parametrize("j", [2, 5, 12, 20])
+def test_graph_invariants(topo, j):
+    g = build_graph(topo, j)
+    assert g.num_nodes == j
+    assert g.is_connected()
+    assert np.array_equal(g.adj, g.adj.T)
+    assert not np.any(np.diag(g.adj))
+
+
+def test_complete_graph_properties():
+    g = build_graph("complete", 12)
+    assert g.num_edges == 12 * 11 // 2
+    assert g.max_degree == 11
+    # complete graph has the largest algebraic connectivity
+    assert g.algebraic_connectivity() > build_graph("ring", 12).algebraic_connectivity()
+
+
+def test_cluster_graph_is_papers_topology():
+    g = build_graph("cluster", 12)
+    # two complete 6-cliques plus one bridge
+    assert g.num_edges == 2 * (6 * 5 // 2) + 1
+
+
+def test_permutation_rounds_cover_all_edges_disjointly():
+    def prop(rng, i):
+        j = int(rng.integers(3, 16))
+        g = build_graph(draw_topology(rng, j), j)
+        rounds = g.permutation_rounds()
+        seen = set()
+        for rnd in rounds:
+            srcs = [s for s, _ in rnd]
+            dsts = [d for _, d in rnd]
+            assert len(set(srcs)) == len(srcs), "duplicate src in a round"
+            assert len(set(dsts)) == len(dsts), "duplicate dst in a round"
+            seen |= set(rnd)
+        assert seen == set(g.directed_edges())
+    sweep(prop, cases=15, seed=1)
+
+
+def test_drop_node_keeps_connectivity():
+    def prop(rng, i):
+        j = int(rng.integers(3, 14))
+        g = build_graph(draw_topology(rng, j), j)
+        victim = int(rng.integers(0, j))
+        g2 = drop_node(g, victim)
+        assert g2.num_nodes == j - 1
+        assert g2.is_connected()
+    sweep(prop, cases=20, seed=2)
+
+
+# --------------------------------------------------------------- penalties
+def _rand_probe(rng, j):
+    f_self = jnp.asarray(rng.normal(size=j).astype(np.float32))
+    f_nbr = jnp.asarray(rng.normal(size=(j, j)).astype(np.float32))
+    return f_self, f_nbr
+
+
+def test_tau_bounds_and_sign():
+    """eq. (7): tau in [-1/2, 1]; better neighbor (lower f) => tau > 0."""
+    def prop(rng, i):
+        j = int(rng.integers(2, 12))
+        g = build_graph(draw_topology(rng, j), j)
+        adj = jnp.asarray(g.adj)
+        f_self, f_nbr = _rand_probe(rng, j)
+        tau = np.asarray(compute_tau(adj, f_self, f_nbr))
+        assert np.all(tau >= -0.5 - 1e-5), tau.min()
+        assert np.all(tau <= 1.0 + 1e-5), tau.max()
+        assert np.all(tau[~np.asarray(g.adj)] == 0.0)
+        # sign: f_i(theta_j) < f_i(theta_i)  =>  tau_ij >= 0
+        fs = np.asarray(f_self)[:, None]
+        fn = np.asarray(f_nbr)
+        better = np.asarray(g.adj) & (fn < fs)
+        assert np.all(tau[better] >= -1e-6)
+    sweep(prop, cases=25, seed=3)
+
+
+def test_ap_eta_ratio_bound():
+    """§3.2: eta stays within [eta0/2, 2*eta0] for the AP scheme."""
+    cfg = PenaltyConfig(scheme="ap", eta0=10.0)
+    g = build_graph("complete", 8)
+    adj = jnp.asarray(g.adj)
+    st = init_penalty_state(cfg, 8)
+    rng = np.random.default_rng(0)
+    for _ in range(60):
+        f_self, f_nbr = _rand_probe(rng, 8)
+        st = update_penalty(cfg, st, adj=adj, f_self=f_self, f_nbr=f_nbr)
+        eta = np.asarray(st.eta)[np.asarray(g.adj)]
+        assert np.all(eta >= 5.0 - 1e-4) and np.all(eta <= 20.0 + 1e-4)
+    # after t_max the penalty freezes at eta0
+    assert np.allclose(np.asarray(st.eta)[np.asarray(g.adj)], 10.0)
+
+
+def test_vp_reset_to_homogeneous():
+    cfg = PenaltyConfig(scheme="vp", eta0=10.0, t_reset=5)
+    g = build_graph("ring", 6)
+    adj = jnp.asarray(g.adj)
+    st = init_penalty_state(cfg, 6)
+    rng = np.random.default_rng(1)
+    for t in range(8):
+        r = jnp.asarray(rng.uniform(0, 10, 6).astype(np.float32))
+        s = jnp.asarray(rng.uniform(0, 0.1, 6).astype(np.float32))
+        st = update_penalty(cfg, st, adj=adj, r_norm=r, s_norm=s)
+    # t >= t_reset: homogeneous eta0 again (§3.1 reset rule)
+    assert np.allclose(np.asarray(st.eta)[np.asarray(g.adj)], 10.0)
+
+
+def test_nap_budget_is_bounded_geometric():
+    """eq. (11): budget never exceeds T/(1-alpha)."""
+    cfg = PenaltyConfig(scheme="nap", eta0=10.0, budget_init=1.0, alpha=0.5,
+                        beta=1e-6, relative_beta=False)
+    g = build_graph("complete", 6)
+    adj = jnp.asarray(g.adj)
+    st = init_penalty_state(cfg, 6)
+    rng = np.random.default_rng(2)
+    for _ in range(200):
+        f_self, f_nbr = _rand_probe(rng, 6)
+        st = update_penalty(cfg, st, adj=adj, f_self=f_self, f_nbr=f_nbr)
+    bound = cfg.budget_init / (1.0 - cfg.alpha) + 1e-5
+    assert np.all(np.asarray(st.budget) <= bound), np.asarray(st.budget).max()
+
+
+def test_nap_budget_blocks_after_exhaustion():
+    """Once the spent budget hits T_ij and f stops moving, eta freezes at eta0."""
+    cfg = PenaltyConfig(scheme="nap", eta0=10.0, budget_init=0.3, alpha=0.5,
+                        beta=0.5, relative_beta=False)
+    g = build_graph("complete", 4)
+    adj = jnp.asarray(g.adj)
+    st = init_penalty_state(cfg, 4)
+    rng = np.random.default_rng(3)
+    f_self, f_nbr = _rand_probe(rng, 4)
+    for _ in range(50):  # same objectives: f never moves => no top-up
+        st = update_penalty(cfg, st, adj=adj, f_self=f_self, f_nbr=f_nbr)
+    eta = np.asarray(st.eta)[np.asarray(g.adj)]
+    cum = np.asarray(st.cum_tau)[np.asarray(g.adj)]
+    assert np.all(cum >= 0.3) or np.allclose(eta, 10.0)
+    assert np.allclose(eta, 10.0)  # exhausted edges are back at eta0
+
+
+@pytest.mark.parametrize("scheme", SCHEMES)
+def test_all_schemes_produce_finite_positive_eta(scheme):
+    cfg = PenaltyConfig(scheme=scheme, eta0=10.0)
+    g = build_graph("cluster", 8)
+    adj = jnp.asarray(g.adj)
+    st = init_penalty_state(cfg, 8)
+    rng = np.random.default_rng(4)
+    for _ in range(30):
+        f_self, f_nbr = _rand_probe(rng, 8)
+        r = jnp.asarray(rng.uniform(0, 5, 8).astype(np.float32))
+        s = jnp.asarray(rng.uniform(0, 5, 8).astype(np.float32))
+        st = update_penalty(cfg, st, adj=adj, f_self=f_self, f_nbr=f_nbr,
+                            r_norm=r, s_norm=s)
+        eta = np.asarray(st.eta)
+        assert np.all(np.isfinite(eta)) and np.all(eta > 0)
+
+
+# --------------------------------------------------------------- residuals
+def test_neighbor_mean_complete_graph():
+    j = 6
+    g = build_graph("complete", j)
+    theta = {"w": jnp.arange(j, dtype=jnp.float32)[:, None] * jnp.ones((j, 3))}
+    bar = neighbor_mean(theta, jnp.asarray(g.adj))
+    # for node i: mean of all others = (sum - i) / (j-1)
+    total = np.arange(j).sum()
+    expect = (total - np.arange(j)) / (j - 1)
+    np.testing.assert_allclose(np.asarray(bar["w"])[:, 0], expect, rtol=1e-6)
+
+
+def test_residuals_zero_at_consensus():
+    j = 5
+    g = build_graph("ring", j)
+    theta = {"w": jnp.ones((j, 4))}
+    bar_prev = neighbor_mean(theta, jnp.asarray(g.adj))
+    rr = local_residuals(theta, bar_prev, jnp.asarray(g.adj), jnp.ones(j))
+    np.testing.assert_allclose(np.asarray(rr.r_norm), 0.0, atol=1e-7)
+    np.testing.assert_allclose(np.asarray(rr.s_norm), 0.0, atol=1e-7)
+
+
+# ------------------------------------------------------- end-to-end ADMM
+def _lsq_problem(j, d=4, n=16, seed=0):
+    rng = np.random.default_rng(seed)
+    A = rng.normal(size=(j, n, d)).astype(np.float32)
+    w_true = rng.normal(size=d).astype(np.float32)
+    b = A @ w_true + 0.01 * rng.normal(size=(j, n)).astype(np.float32)
+    w_star = np.linalg.lstsq(A.reshape(-1, d), b.reshape(-1), rcond=None)[0]
+    theta0 = {"w": jnp.asarray(rng.normal(size=(j, d)).astype(np.float32))}
+    return (jnp.asarray(A), jnp.asarray(b)), theta0, w_star
+
+
+def _lsq_obj(data, th):
+    Ai, bi = data
+    return jnp.sum((Ai @ th["w"] - bi) ** 2)
+
+
+@pytest.mark.parametrize("scheme", SCHEMES)
+def test_admm_converges_to_centralized_lsq(scheme):
+    j = 6
+    data, theta0, w_star = _lsq_problem(j)
+    eng = ConsensusADMM(objective=_lsq_obj,
+                        penalty_cfg=PenaltyConfig(scheme=scheme, eta0=1.0),
+                        graph=build_graph("complete", j),
+                        inner_steps=30, inner_lr=1.0)
+    st = eng.init(theta0)
+    st, hist = eng.run(st, data, max_iters=250, rel_tol=1e-8)
+    w = np.asarray(st.theta["w"])
+    assert np.abs(w - w_star).max() < 0.02, scheme
+    assert float(consensus_error(st.theta)) < 0.02
+
+
+def test_admm_topology_robustness():
+    def prop(rng, i):
+        j = int(rng.integers(3, 9))
+        topo = draw_topology(rng, j)
+        data, theta0, w_star = _lsq_problem(j, seed=i)
+        eng = ConsensusADMM(objective=_lsq_obj,
+                            penalty_cfg=PenaltyConfig(scheme="nap", eta0=1.0),
+                            graph=build_graph(topo, j),
+                            inner_steps=30, inner_lr=1.0)
+        st = eng.init(theta0)
+        st, _ = eng.run(st, data, max_iters=400, rel_tol=1e-9)
+        w = np.asarray(st.theta["w"])
+        assert np.abs(w - w_star).max() < 0.05, (topo, j)
+    sweep(prop, cases=4, seed=7)
+
+
+def test_expander_topology_scales_consensus():
+    """Production-scale topology: expander mixes ~as fast as complete at a
+    fraction of the edges (the J-in-the-hundreds pod-graph recommendation)."""
+    j = 12
+    data, theta0, w_star = _lsq_problem(j, seed=3)
+    results = {}
+    for topo in ("complete", "expander", "ring"):
+        eng = ConsensusADMM(objective=_lsq_obj,
+                            penalty_cfg=PenaltyConfig(scheme="nap", eta0=1.0),
+                            graph=build_graph(topo, j),
+                            inner_steps=30, inner_lr=1.0)
+        st = eng.init(theta0)
+        st, hist = eng.run(st, data, max_iters=250, rel_tol=1e-9)
+        err = np.abs(np.asarray(st.theta["w"]) - w_star).max()
+        results[topo] = (hist["iterations"], err)
+    assert results["expander"][1] < 0.05
+    # expander needs far fewer edges than complete but converges, unlike-
+    # ring-slow: its iteration count stays within 3x of complete's
+    assert results["expander"][0] <= results["complete"][0] * 3 + 20
+    g_c = build_graph("complete", j)
+    g_e = build_graph("expander", j)
+    assert g_e.num_edges < g_c.num_edges / 2
+
+
+def test_probe_midpoint_variant_converges():
+    """§3.2 locality remark: probing at rho_ij=(theta_i+theta_j)/2."""
+    j = 5
+    data, theta0, w_star = _lsq_problem(j, seed=4)
+    eng = ConsensusADMM(objective=_lsq_obj,
+                        penalty_cfg=PenaltyConfig(scheme="ap", eta0=1.0),
+                        graph=build_graph("complete", j),
+                        inner_steps=30, inner_lr=1.0, probe_midpoint=True)
+    st = eng.init(theta0)
+    st, _ = eng.run(st, data, max_iters=250, rel_tol=1e-9)
+    assert np.abs(np.asarray(st.theta["w"]) - w_star).max() < 0.05

@@ -1,0 +1,68 @@
+"""Unit tests for the dry-run accounting (HLO parsing, roofline math)."""
+import numpy as np
+import pytest
+
+from repro.launch.dryrun import (_shape_bytes, collective_bytes,
+                                 roofline_terms)
+from repro.launch.mesh import HBM_BW, PEAK_FLOPS_BF16
+
+
+def test_shape_bytes():
+    assert _shape_bytes("f32", "2,3") == 24
+    assert _shape_bytes("bf16", "1024") == 2048
+    assert _shape_bytes("pred", "8,8") == 64
+    assert _shape_bytes("s32", "") == 4          # scalar
+    assert _shape_bytes("token", "4") == 0       # unknown dtype ignored
+
+
+def test_collective_bytes_parses_hlo():
+    hlo = """
+  %ag = bf16[16,1024]{1,0} all-gather(bf16[1,1024]{1,0} %x), dimensions={0}
+  %ar = f32[256]{0} all-reduce(f32[256]{0} %y), to_apply=%add
+  %rs = f32[8,32]{1,0} reduce-scatter(f32[64,32]{1,0} %z), dimensions={0}
+  %cp = bf16[128]{0} collective-permute(bf16[128]{0} %w)
+  %a2a = (f32[4,4]{1,0}) all-to-all(f32[4,4]{1,0} %v)
+  %noise = f32[9]{0} add(f32[9]{0} %a, f32[9]{0} %b)
+"""
+    tot = collective_bytes(hlo)
+    assert tot["all-gather"] == 16 * 1024 * 2
+    assert tot["all-reduce"] == 256 * 4
+    assert tot["reduce-scatter"] == 8 * 32 * 4
+    assert tot["collective-permute"] == 128 * 2
+    assert tot["all-to-all"] == 4 * 4 * 4
+    # all-reduce double-counted on the wire
+    expected = (16 * 1024 * 2 + 2 * 256 * 4 + 8 * 32 * 4 + 128 * 2
+                + 4 * 4 * 4)
+    assert tot["wire_total"] == expected
+
+
+def test_collective_bytes_handles_start_ops():
+    hlo = "%s = f32[64]{0} all-reduce-start(f32[64]{0} %x)"
+    tot = collective_bytes(hlo)
+    assert tot["all-reduce"] == 256
+
+
+def test_roofline_terms_dominance():
+    # pure-compute workload
+    r = roofline_terms(PEAK_FLOPS_BF16, 0.0, 0.0, 256)
+    assert r["dominant"] == "compute" and abs(r["compute_s"] - 1.0) < 1e-9
+    # memory-bound workload
+    r = roofline_terms(0.0, HBM_BW * 2, 0.0, 256)
+    assert r["dominant"] == "memory" and abs(r["memory_s"] - 2.0) < 1e-9
+    # collective-bound
+    r = roofline_terms(1.0, 1.0, 50e9, 256)
+    assert r["dominant"] == "collective"
+
+
+def test_model_flops_yardstick():
+    from repro.configs import SHAPES, get_config
+    from repro.launch.dryrun import model_flops
+    from repro.models import build_model
+    m = build_model(get_config("qwen3-4b"))
+    f = model_flops(m, SHAPES["train_4k"])
+    # 6 * N * tokens within 20% of hand calc
+    expect = 6.0 * m.active_param_count() * 256 * 4096
+    assert abs(f - expect) / expect < 1e-6
+    # decode counts one token per sequence
+    f_dec = model_flops(m, SHAPES["decode_32k"])
+    assert f_dec == 2.0 * m.active_param_count() * 128

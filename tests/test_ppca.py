@@ -1,0 +1,126 @@
+"""Tests for PPCA / D-PPCA — the paper's application layer."""
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.core import PenaltyConfig, build_graph
+from repro.ppca import (DPPCA, fit_em, fit_svd, init_params,
+                        max_subspace_angle, nll, subspace_angle,
+                        subspace_data, turntable_sfm)
+from repro.ppca import ppca as cp
+
+
+@pytest.fixture(scope="module")
+def synth():
+    return subspace_data(4, n=200, d=12, m=3, seed=0)
+
+
+def test_centralized_em_matches_svd(synth):
+    x = jnp.asarray(synth.x_all, jnp.float32)
+    p_svd = fit_svd(x, 3)
+    p0 = init_params(jax.random.PRNGKey(0), 12, 3)
+    p_em, trace = fit_em(p0, x, 300)
+    ang = float(jnp.rad2deg(subspace_angle(p_em.W, p_svd.W)))
+    assert ang < 0.5, ang
+    assert abs(float(nll(p_em, x)) - float(nll(p_svd, x))) / abs(
+        float(nll(p_svd, x))) < 1e-3
+
+
+def test_em_nll_monotone_decreasing(synth):
+    x = jnp.asarray(synth.x_all, jnp.float32)
+    p0 = init_params(jax.random.PRNGKey(1), 12, 3)
+    _, trace = fit_em(p0, x, 100)
+    t = np.asarray(trace)
+    # EM guarantees monotone decrease of the marginal NLL
+    assert np.all(t[1:] <= t[:-1] + 1e-2), np.max(t[1:] - t[:-1])
+
+
+def test_e_step_posterior_shapes(synth):
+    x = jnp.asarray(synth.x_all, jnp.float32)
+    p = init_params(jax.random.PRNGKey(0), 12, 3)
+    st = cp.e_step(p, x)
+    assert st.Ez.shape == (x.shape[0], 3)
+    assert st.Ezz.shape == (x.shape[0], 3, 3)
+    # Ezz - Ez Ez^T = posterior covariance: must be PSD
+    cov = np.asarray(st.Ezz - st.Ez[:, :, None] * st.Ez[:, None, :])
+    evs = np.linalg.eigvalsh(cov)
+    assert np.all(evs > -1e-5)
+
+
+def test_dppca_single_node_equals_centralized():
+    data = subspace_data(1, n=200, d=12, m=3, seed=2)
+    x = jnp.asarray(data.x, jnp.float32)
+    eng = DPPCA(latent_dim=3, graph=build_graph("complete", 1),
+                penalty_cfg=PenaltyConfig(scheme="fixed", eta0=10.0))
+    st = eng.init(jax.random.PRNGKey(3), x)
+    for _ in range(150):
+        st, m = eng.step(st, x)
+    p_svd = fit_svd(x[0], 3)
+    ang = float(jnp.rad2deg(subspace_angle(st.W[0], p_svd.W)))
+    assert ang < 1.0, ang
+    assert abs(float(st.a[0]) - float(p_svd.a)) / float(p_svd.a) < 0.05
+
+
+@pytest.mark.parametrize("scheme", ["fixed", "vp", "ap", "nap", "vp_ap",
+                                    "vp_nap"])
+def test_dppca_all_schemes_recover_subspace(scheme):
+    J = 6
+    data = subspace_data(J, n=300, d=16, m=4, seed=4)
+    x = jnp.asarray(data.x)
+    eng = DPPCA(latent_dim=4, graph=build_graph("complete", J),
+                penalty_cfg=PenaltyConfig(scheme=scheme, eta0=10.0))
+    st = eng.init(jax.random.PRNGKey(5), x)
+    for _ in range(250):
+        st, m = eng.step(st, x)
+    ang = float(max_subspace_angle(st.W, jnp.asarray(data.W_true)))
+    assert ang < 6.0, (scheme, ang)
+    assert np.all(np.isfinite(np.asarray(st.W)))
+    # multiplier-sum invariants (the symmetrized dual conserves these)
+    assert abs(float(st.bet.sum())) < 1e-3 * (1 + float(jnp.abs(st.bet).max()))
+
+
+def test_dppca_consensus_tightens():
+    J = 6
+    data = subspace_data(J, n=300, d=16, m=4, seed=6)
+    x = jnp.asarray(data.x)
+    eng = DPPCA(latent_dim=4, graph=build_graph("ring", J),
+                penalty_cfg=PenaltyConfig(scheme="nap", eta0=10.0))
+    st = eng.init(jax.random.PRNGKey(7), x)
+    r_early = r_late = None
+    for it in range(500):
+        st, m = eng.step(st, x)
+        if it == 10:
+            r_early = float(m["r_max"])
+        r_late = float(m["r_max"])
+    # ring topologies converge slowly (paper Fig. 2d) but do converge
+    assert r_late < min(0.1, r_early * 0.1), (r_early, r_late)
+
+
+def test_sfm_transposed_layout_recovers_structure():
+    """D-PPCA on the turntable: consensus W must span the true 3D structure."""
+    sfm = turntable_sfm(num_cameras=5, frames=30, points=60, seed=0)
+    x = jnp.asarray(sfm.x_nodes)  # [5, 12, 60]: samples=frame-rows, dim=points
+    eng = DPPCA(latent_dim=3, graph=build_graph("complete", 5),
+                penalty_cfg=PenaltyConfig(scheme="nap", eta0=10.0))
+    st = eng.init(jax.random.PRNGKey(8), x)
+    for _ in range(300):
+        st, _ = eng.step(st, x)
+    # centralized SVD structure: top-3 right singular vectors of measurements
+    p_ref = fit_svd(jnp.asarray(sfm.measurements), 3)   # W_ref: [N, 3]
+    ang = float(max_subspace_angle(st.W, p_ref.W))
+    assert ang < 10.0, ang
+
+
+def test_subspace_angle_properties():
+    rng = np.random.default_rng(0)
+    W = jnp.asarray(rng.normal(size=(10, 3)).astype(np.float32))
+    # identical subspaces -> 0; rotated basis -> still 0
+    R = jnp.asarray(np.linalg.qr(rng.normal(size=(3, 3)))[0].astype(np.float32))
+    # float32 QR/SVD noise: ~3e-4 rad (0.02 deg)
+    assert float(subspace_angle(W, W)) < 2e-3
+    assert float(subspace_angle(W, W @ R)) < 2e-3
+    # orthogonal complement direction -> 90 degrees for rank-1
+    a = jnp.asarray([[1.0], [0.0]])
+    b = jnp.asarray([[0.0], [1.0]])
+    assert abs(float(subspace_angle(a, b)) - np.pi / 2) < 1e-6

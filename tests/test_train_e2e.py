@@ -1,0 +1,84 @@
+"""End-to-end launcher tests: train -> checkpoint -> crash -> resume,
+straggler handling, and elastic node-drop (subprocess: needs 8 devices)."""
+import json
+import os
+import subprocess
+import sys
+
+import pytest
+
+ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+
+def _run(script: str, timeout=1200):
+    env = dict(os.environ)
+    env["PYTHONPATH"] = os.path.join(ROOT, "src")
+    proc = subprocess.run([sys.executable, "-c", script], env=env,
+                          capture_output=True, text=True, timeout=timeout)
+    assert proc.returncode == 0, proc.stderr[-3000:]
+    line = [ln for ln in proc.stdout.splitlines()
+            if ln.startswith("RESULT ")][-1]
+    return json.loads(line[len("RESULT "):])
+
+
+_RESUME = r"""
+import os, json, shutil
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+ck = "/tmp/repro_test_resume"
+shutil.rmtree(ck, ignore_errors=True)
+from repro.launch.train import main
+# phase 1: 8 steps, checkpoint every 4
+main(["--arch", "qwen3-4b", "--reduced", "--steps", "8", "--ckpt-dir", ck,
+      "--ckpt-every", "4", "--scheme", "nap", "--local-steps", "4"])
+from repro.checkpoint import latest_steps
+steps_after_1 = latest_steps(ck)
+# phase 2 simulates a restart: same command, more steps -> resumes from 8
+main(["--arch", "qwen3-4b", "--reduced", "--steps", "12", "--ckpt-dir", ck,
+      "--ckpt-every", "4", "--scheme", "nap", "--local-steps", "4"])
+steps_after_2 = latest_steps(ck)
+print("RESULT " + json.dumps({"p1": steps_after_1, "p2": steps_after_2}))
+"""
+
+
+def test_train_checkpoint_resume():
+    out = _run(_RESUME)
+    assert 8 in out["p1"], out
+    assert max(out["p2"]) == 12, out
+
+
+_ELASTIC = r"""
+import os, json
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+import numpy as np
+import jax
+from repro.core.graph import build_graph
+from repro.core.penalty import PenaltyConfig, init_penalty_state
+from repro.runtime import ElasticController, StragglerMonitor
+
+# straggler detection drives the elastic drop
+mon = StragglerMonitor(4, threshold=2.0, patience=2)
+g = build_graph("ring", 4)
+pen = init_penalty_state(PenaltyConfig(scheme="nap"), 4)
+ctl = ElasticController(g)
+victims = []
+for step in range(6):
+    durations = np.array([1.0, 1.0, 1.0, 1.0 if step < 2 else 9.0])
+    slow = mon.observe(durations)
+    for v in slow:
+        if ctl.graph.num_nodes > 2 and not victims:
+            g2, pen = ctl.drop(v, pen, step)
+            victims.append(v)
+print("RESULT " + json.dumps({
+    "victims": victims,
+    "nodes": ctl.graph.num_nodes,
+    "connected": ctl.graph.is_connected(),
+    "pen_shape": list(np.asarray(pen.eta).shape),
+}))
+"""
+
+
+def test_straggler_to_elastic_pipeline():
+    out = _run(_ELASTIC, timeout=600)
+    assert out["victims"] == [3]
+    assert out["nodes"] == 3 and out["connected"]
+    assert out["pen_shape"] == [3, 3]
