@@ -4,11 +4,13 @@ from __future__ import annotations
 import contextlib
 import csv
 import io
+import json
 import os
 import sys
 import time
 
 RESULTS_DIR = os.path.join(os.path.dirname(__file__), "results")
+REPO_ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
 
 
 def write_csv(name: str, rows: list[dict]):
@@ -20,6 +22,18 @@ def write_csv(name: str, rows: list[dict]):
         w = csv.DictWriter(f, fieldnames=list(rows[0].keys()))
         w.writeheader()
         w.writerows(rows)
+    return path
+
+
+def write_json(name: str, obj, *, repo_root: bool = False):
+    """Write a JSON artifact; ``repo_root=True`` puts it at the repo root
+    (committed perf baselines like BENCH_consensus.json live there)."""
+    base = REPO_ROOT if repo_root else RESULTS_DIR
+    os.makedirs(base, exist_ok=True)
+    path = os.path.join(base, name)
+    with open(path, "w") as f:
+        json.dump(obj, f, indent=1, sort_keys=True)
+        f.write("\n")
     return path
 
 

@@ -1,8 +1,13 @@
 """Consensus-round overhead microbench (the paper's technique at LM scale).
 
-Measures on the CPU debug mesh: local step time, consensus round time, the
+Measures on the CPU debug mesh: local step time, fused (flat-buffer Pallas
+engine) vs unfused (blockwise jnp reference) consensus round time, the
 effect of int8 exchange compression, and the communication-volume ratio of
 consensus-every-H vs all-reduce-every-step (analytic).
+
+Emits ``BENCH_consensus.json`` at the repo root — the committed perf
+baseline tracking round ms, wire bytes per round and the HBM-pass estimate
+of the fused engine from PR 1 on.
 """
 from __future__ import annotations
 
@@ -10,7 +15,21 @@ import time
 
 import numpy as np
 
-from benchmarks.common import write_csv
+from benchmarks.common import write_csv, write_json
+
+
+def _time_round(cons, state, data, *, rounds: int = 10):
+    """Median-of-rounds: CPU interpret-mode rounds are ~1s and noisy."""
+    import jax
+    state, cm = cons(state, data.batch(0, probe=True))      # warm/compile
+    jax.block_until_ready(cm["r_max"])
+    times = []
+    for s in range(rounds):
+        t0 = time.time()
+        state, cm = cons(state, data.batch(s, probe=True))
+        jax.block_until_ready(cm["r_max"])
+        times.append(time.time() - t0)
+    return float(np.median(times)), state
 
 
 def run(steps: int = 6) -> list[dict]:
@@ -27,9 +46,14 @@ def run(steps: int = 6) -> list[dict]:
     rows = []
     from repro.configs import get_reduced_config
     from repro.models import build_model
+    from repro.optim import flatten
     cfg = get_reduced_config("qwen3-4b")
     model = build_model(cfg)
-    params_bytes = model.param_count() * 2  # bf16 wire
+    # same wire accounting as the measured rows / dryrun roofline
+    ap = model.abstract_params()
+    lay0 = flatten.FlatLayout.for_tree(
+        ap, block_size=flatten.auto_block_size(ap), node_axis=False)
+    params_bytes = lay0.wire_bytes("none")
 
     for h in (1, 4, 16):
         # cross-pod bytes per step: consensus exchanges deg x params every H
@@ -44,42 +68,60 @@ def run(steps: int = 6) -> list[dict]:
                  "wire_bytes_per_step": int(allreduce_bytes),
                  "vs_allreduce": 1.0})
 
+    bench = {"mesh": "2x2x2 (8 fake CPU devices)" if mesh is not None
+             else "analytic-only", "arch": "qwen3-4b (reduced)",
+             "rounds": {}}
     if mesh is not None:
-        import jax.numpy as jnp
         from repro.core.penalty import PenaltyConfig
         from repro.data import DataConfig, SyntheticTokens
+        from repro.launch.dryrun import fused_round_roofline
         from repro.optim import ConsensusConfig, ConsensusTrainer
         from repro.optim.adamw import AdamWConfig
+        data = SyntheticTokens(DataConfig(
+            vocab=cfg.vocab, seq_len=32, batch_per_node=2, num_nodes=2))
         for compression in ("none", "int8"):
-            tr = ConsensusTrainer(
-                model, mesh, adamw=AdamWConfig(lr=1e-2),
-                consensus=ConsensusConfig(
-                    penalty=PenaltyConfig(scheme="nap", eta0=0.1),
-                    topology="ring", local_steps=4,
-                    compression=compression))
-            state = tr.init_state(jax.random.PRNGKey(0))
-            data = SyntheticTokens(DataConfig(
-                vocab=cfg.vocab, seq_len=32, batch_per_node=2, num_nodes=2))
-            train = jax.jit(tr.train_step)
-            cons = jax.jit(tr.consensus_step)
-            state, _ = train(state, data.batch(0))          # warm
-            state, _ = cons(state, data.batch(0, probe=True))
-            t0 = time.time()
-            for s in range(steps):
-                state, m = train(state, data.batch(s))
-            jax.block_until_ready(m["loss"])
-            t_local = (time.time() - t0) / steps
-            t0 = time.time()
-            for s in range(3):
-                state, cm = cons(state, data.batch(s, probe=True))
-            jax.block_until_ready(cm["r_max"])
-            t_cons = (time.time() - t0) / 3
-            rows.append({"mode": f"measured_{compression}",
-                         "wire_bytes_per_step": int(params_bytes),
-                         "vs_allreduce": round(t_cons / max(t_local, 1e-9),
-                                               3)})
-            print(f"consensus bench ({compression}): local "
-                  f"{t_local*1e3:.1f}ms round {t_cons*1e3:.1f}ms")
+            t_local = None          # train_step is fused-flag independent:
+            for fused in (True, False):     # time it once per compression
+                tr = ConsensusTrainer(
+                    model, mesh, adamw=AdamWConfig(lr=1e-2),
+                    consensus=ConsensusConfig(
+                        penalty=PenaltyConfig(scheme="nap", eta0=0.1),
+                        topology="ring", local_steps=4,
+                        compression=compression, use_fused_kernel=fused))
+                state = tr.init_state(jax.random.PRNGKey(0))
+                train, cons = tr.jit_step_fns()
+                state, m = train(state, data.batch(0))          # warm
+                if t_local is None:
+                    t0 = time.time()
+                    for s in range(steps):
+                        state, m = train(state, data.batch(s))
+                    jax.block_until_ready(m["loss"])
+                    t_local = (time.time() - t0) / steps
+                t_cons, state = _time_round(cons, state, data)
+                tag = f"{'fused' if fused else 'unfused'}_{compression}"
+                # per node per round, summed over graph offsets — the same
+                # accounting the dryrun roofline uses
+                wire_bytes = len(tr.offsets) * tr.layout.wire_bytes(
+                    compression)
+                rows.append({"mode": f"measured_{tag}",
+                             "wire_bytes_per_step": wire_bytes,
+                             "vs_allreduce": round(t_cons
+                                                   / max(t_local, 1e-9), 3)})
+                bench["rounds"][tag] = {
+                    "round_ms": round(t_cons * 1e3, 2),
+                    "local_step_ms": round(t_local * 1e3, 2),
+                    "wire_bytes_per_round": wire_bytes,
+                }
+                print(f"consensus bench ({tag}): local {t_local*1e3:.1f}ms "
+                      f"round {t_cons*1e3:.1f}ms")
+        bench["fused_round_model"] = {
+            comp: fused_round_roofline(model, mesh, compression=comp)
+            for comp in ("none", "int8")}
+        f_ms = bench["rounds"]["fused_none"]["round_ms"]
+        u_ms = bench["rounds"]["unfused_none"]["round_ms"]
+        bench["fused_vs_unfused"] = round(f_ms / max(u_ms, 1e-9), 3)
+        path = write_json("BENCH_consensus.json", bench, repo_root=True)
+        print(f"wrote {path} (fused/unfused = {bench['fused_vs_unfused']})")
     write_csv("consensus_overhead.csv", rows)
     return rows
 

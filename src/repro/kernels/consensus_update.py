@@ -1,17 +1,37 @@
-"""Pallas fused consensus-round update — the ADMM hot loop in one HBM pass.
+"""Pallas fused consensus-round kernels — the ADMM hot loop in one HBM pass.
 
 One ADMM consensus round touches every parameter ~6 times when written
 naively (prox pull, dual update, two residual reductions, two neighbor
-means). The math is all elementwise over the flattened parameter vector, so
-it is purely memory-bound: fusing it into a single kernel takes the round
-from ~6 HBM passes to 1 read + 2 writes.
+means) plus one more full pass to dequantize an int8 wire payload. The math
+is all elementwise over the flattened parameter vector, so it is purely
+memory-bound: fusing it into a single kernel takes the round from ~7 HBM
+passes to one read per operand + one write per result.
 
-Per block of the flat parameter vector:
-    theta_new = theta - step (2 lam + eta_sum (theta - nbr_avg))
+Two entry points:
+
+  * ``consensus_update`` — the original per-vector kernel (prox pull + dual
+    update + both residual partials; neighbor means precomputed upstream).
+    Kept as the simple building block and oracle target.
+  * ``consensus_round`` — the flat-buffer engine kernel: takes the raw
+    *rolled wire payloads* for every graph offset (int8 or float) and fuses
+    dequantization, both neighbor means, prox pull, dual update and both
+    residual reductions. Per-node scalars (alpha, eta_sum, eta_node), the
+    per-offset edge weights and the per-(offset, node, leaf) dequant scales
+    ride in SMEM; a static block->leaf table resolves which scale applies to
+    the current block.
+
+Per block of the flat parameter vector (``consensus_round``):
+    nbr_w     = sum_d e_sym[d] * dequant(wire[d])
+    bar       = sum_d dequant(wire[d]) / deg
+    nbr_avg   = nbr_w / max(eta_sum, eps)
+    theta_new = theta - alpha (2 lam + eta_sum (theta - nbr_avg))
     lam_new   = lam + 0.5 eta_sum (theta_new - nbr_avg)
-    r_sq     += |theta_new - theta_bar|^2          (per-block partials)
-    s_sq     += eta_node^2 |theta_bar - theta_bar_prev|^2
-Scalars (eta_sum, eta_node, step) ride in SMEM.
+    r_sq     += |theta_new - bar|^2                      (per-block partials)
+    s_sq     += eta_node^2 |bar - bar_prev|^2
+
+SMEM footprint note: the block->leaf table costs 4 bytes per block — pick
+``block_size`` >= 64k at LM scale so a multi-billion-parameter vector keeps
+the table in the tens of KB.
 """
 from __future__ import annotations
 
@@ -21,6 +41,11 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
+
+
+def _pad1(x, padded):
+    (n,) = x.shape
+    return x if padded == n else jnp.pad(x, (0, padded - n))
 
 
 def _kernel(scalars_ref, theta_ref, lam_ref, nbr_ref, bar_ref, barp_ref,
@@ -48,14 +73,20 @@ def _kernel(scalars_ref, theta_ref, lam_ref, nbr_ref, bar_ref, barp_ref,
 def consensus_update(theta, lam, nbr_avg, theta_bar, theta_bar_prev, *,
                      eta_sum, eta_node, step_size,
                      block_size: int = 65536, interpret: bool = True):
-    """All tensor args are flat [N] vectors (pad to block multiple upstream).
+    """All tensor args are flat [N] vectors; N need NOT be a block multiple.
+
+    Non-multiple N is zero-padded internally: zero inputs are a fixed point
+    of the update (theta_new = lam_new = 0) and contribute exactly 0 to both
+    residual reductions, so the padded sums equal the masked ones.
 
     Returns (theta_new [N], lam_new [N], r_sq scalar, s_sq scalar).
     """
     (n,) = theta.shape
     block_size = min(block_size, n)
-    assert n % block_size == 0, (n, block_size)
-    grid = (n // block_size,)
+    padded = -(-n // block_size) * block_size
+    args = [_pad1(x, padded)
+            for x in (theta, lam, nbr_avg, theta_bar, theta_bar_prev)]
+    grid = (padded // block_size,)
     scalars = jnp.stack([jnp.asarray(eta_sum, jnp.float32),
                          jnp.asarray(eta_node, jnp.float32),
                          jnp.asarray(step_size, jnp.float32)])
@@ -74,11 +105,207 @@ def consensus_update(theta, lam, nbr_avg, theta_bar, theta_bar_prev, *,
             pl.BlockSpec((1,), lambda i: (i,)),
         ],
         out_shape=[
-            jax.ShapeDtypeStruct((n,), theta.dtype),
-            jax.ShapeDtypeStruct((n,), lam.dtype),
+            jax.ShapeDtypeStruct((padded,), theta.dtype),
+            jax.ShapeDtypeStruct((padded,), lam.dtype),
             jax.ShapeDtypeStruct(grid, jnp.float32),
             jax.ShapeDtypeStruct(grid, jnp.float32),
         ],
         interpret=interpret,
-    )(scalars, theta, lam, nbr_avg, theta_bar, theta_bar_prev)
-    return theta_new, lam_new, rsq.sum(), ssq.sum()
+    )(scalars, *args)
+    return theta_new[:n], lam_new[:n], rsq.sum(), ssq.sum()
+
+
+def _round_kernel(deg, block_leaf_ref, node_ref, esym_ref, scale_ref,
+                  theta_ref, lam_ref, barp_ref, wires_ref,
+                  theta_out, lam_out, bar_out, rsq_out, ssq_out):
+    b = pl.program_id(1)
+    li = block_leaf_ref[b]
+    alpha = node_ref[0, 0]
+    eta_sum = node_ref[1, 0]
+    eta_node = node_ref[2, 0]
+
+    theta = theta_ref[0, :].astype(jnp.float32)
+    lam = lam_ref[0, :].astype(jnp.float32)
+    barp = barp_ref[0, :].astype(jnp.float32)
+
+    nbr_w = jnp.zeros_like(theta)
+    nbr_p = jnp.zeros_like(theta)
+    for d in range(deg):                      # static unroll over offsets
+        x = wires_ref[d, 0, :].astype(jnp.float32) * scale_ref[d, 0, li]
+        nbr_w = nbr_w + esym_ref[d, 0] * x
+        nbr_p = nbr_p + x
+    bar = nbr_p * (1.0 / deg)
+    nbr = nbr_w / jnp.maximum(eta_sum, 1e-12)
+
+    theta_new = theta - alpha * (2.0 * lam + eta_sum * (theta - nbr))
+    lam_new = lam + 0.5 * eta_sum * (theta_new - nbr)
+    theta_out[0, :] = theta_new.astype(theta_out.dtype)
+    lam_out[0, :] = lam_new.astype(lam_out.dtype)
+    bar_out[0, :] = bar.astype(bar_out.dtype)
+    rsq_out[0, 0] = jnp.sum((theta_new - bar) ** 2)
+    dbar = bar - barp
+    ssq_out[0, 0] = (eta_node * eta_node) * jnp.sum(dbar * dbar)
+
+
+def _row_kernel(deg, block_size, block_leaf_ref, node_ref, esym_ref,
+                scale_ref, theta_ref, lam_ref, barp_ref, wires_ref,
+                theta_out, lam_out, bar_out, rsq_out, ssq_out):
+    """Whole-row variant of ``_round_kernel`` (one grid step per node).
+
+    Used in interpret mode, where there is no VMEM limit and the per-grid-
+    step interpreter dispatch (~ms on CPU) would otherwise dominate: the
+    8-block tiling that keeps the TPU kernel inside VMEM buys nothing under
+    the interpreter. The math and the residual reduction ORDER (blockwise
+    partial sums) are identical to the blocked kernel, so both variants
+    match ``ref.consensus_round_ref`` to the same round-off.
+    """
+    alpha = node_ref[0, 0]
+    eta_sum = node_ref[1, 0]
+    eta_node = node_ref[2, 0]
+    theta = theta_ref[0, :].astype(jnp.float32)
+    lam = lam_ref[0, :].astype(jnp.float32)
+    barp = barp_ref[0, :].astype(jnp.float32)
+
+    bl = block_leaf_ref[...]
+    nbr_w = jnp.zeros_like(theta)
+    nbr_p = jnp.zeros_like(theta)
+    for d in range(deg):
+        scale_vec = jnp.repeat(scale_ref[d, 0, :][bl], block_size,
+                               total_repeat_length=theta.shape[0])
+        x = wires_ref[d, 0, :].astype(jnp.float32) * scale_vec
+        nbr_w = nbr_w + esym_ref[d, 0] * x
+        nbr_p = nbr_p + x
+    bar = nbr_p * (1.0 / deg)
+    nbr = nbr_w / jnp.maximum(eta_sum, 1e-12)
+
+    theta_new = theta - alpha * (2.0 * lam + eta_sum * (theta - nbr))
+    lam_new = lam + 0.5 * eta_sum * (theta_new - nbr)
+    theta_out[0, :] = theta_new.astype(theta_out.dtype)
+    lam_out[0, :] = lam_new.astype(lam_out.dtype)
+    bar_out[0, :] = bar.astype(bar_out.dtype)
+
+    def blocksum(v):                    # same order as the blocked kernel
+        return v.reshape(-1, block_size).sum(axis=-1).sum()
+
+    rsq_out[0, 0] = blocksum((theta_new - bar) ** 2)
+    dbar = bar - barp
+    ssq_out[0, 0] = (eta_node * eta_node) * blocksum(dbar * dbar)
+
+
+def _row_round(theta, lam, bar_prev, wires, scales, e_sym, node_scalars,
+               block_leaf_arr, *, block_size, interpret):
+    j, total = theta.shape
+    deg = wires.shape[0]
+    vec = pl.BlockSpec((1, total), lambda i: (i, 0))
+    return pl.pallas_call(
+        functools.partial(_row_kernel, deg, block_size),
+        grid=(j,),
+        in_specs=[
+            pl.BlockSpec(memory_space=pltpu.SMEM),       # block -> leaf
+            pl.BlockSpec((3, 1), lambda i: (0, i),
+                         memory_space=pltpu.SMEM),
+            pl.BlockSpec((deg, 1), lambda i: (0, i),
+                         memory_space=pltpu.SMEM),
+            pl.BlockSpec((deg, 1, scales.shape[-1]), lambda i: (0, i, 0),
+                         memory_space=pltpu.SMEM),
+            vec, vec, vec,
+            pl.BlockSpec((deg, 1, total), lambda i: (0, i, 0)),
+        ],
+        out_specs=[vec, vec, vec,
+                   pl.BlockSpec((1, 1), lambda i: (i, 0)),
+                   pl.BlockSpec((1, 1), lambda i: (i, 0))],
+        out_shape=[
+            jax.ShapeDtypeStruct((j, total), theta.dtype),
+            jax.ShapeDtypeStruct((j, total), lam.dtype),
+            jax.ShapeDtypeStruct((j, total), jnp.float32),
+            jax.ShapeDtypeStruct((j, 1), jnp.float32),
+            jax.ShapeDtypeStruct((j, 1), jnp.float32),
+        ],
+        input_output_aliases={4: 0, 5: 1, 6: 2},
+        interpret=interpret,
+    )(block_leaf_arr, node_scalars, e_sym.astype(jnp.float32),
+      scales.astype(jnp.float32), theta, lam, bar_prev, wires)
+
+
+@functools.partial(jax.jit, static_argnames=("block_leaf", "block_size",
+                                             "interpret", "whole_rows"))
+def consensus_round(theta, lam, bar_prev, wires, scales, e_sym,
+                    alpha, eta_sum, eta_node, *,
+                    block_leaf: tuple[int, ...], block_size: int,
+                    interpret: bool = True,
+                    whole_rows: bool | None = None):
+    """Whole-round fused kernel over the flat buffer.
+
+    Args:
+      theta, lam, bar_prev: [J, total] float buffers (total = blocks * bs).
+      wires: [deg, J, total] rolled wire payloads — int8 (quantized) or any
+        float dtype; row d holds theta_{(i+off_d) % J} at node i.
+      scales: [deg, J, L] f32 per-leaf dequant scales (ones when the wire is
+        uncompressed).
+      e_sym: [deg, J] f32 symmetrized per-edge penalties eta_sym_ij.
+      alpha, eta_sum, eta_node: [J] f32 per-node scalars.
+      block_leaf: static tuple, owning leaf id per block (FlatLayout table).
+      block_size: elements per block; must divide total.
+
+    Returns (theta_new [J, total], lam_new [J, total], bar [J, total] f32,
+             r_sq [J], s_sq [J]).
+
+    The input buffers theta/lam/bar_prev are aliased to the outputs
+    theta_new/lam_new/bar, so with donated jit arguments XLA updates them
+    in place.
+
+    ``whole_rows`` (default: follow ``interpret``) switches to one grid
+    step per node row — the interpreter tiling; the VMEM-sized blocked grid
+    is for real TPU runs (and stays testable via ``whole_rows=False``).
+    """
+    j, total = theta.shape
+    deg = wires.shape[0]
+    assert total % block_size == 0, (total, block_size)
+    nblocks = total // block_size
+    assert len(block_leaf) == nblocks, (len(block_leaf), nblocks)
+
+    node_scalars = jnp.stack([
+        jnp.asarray(alpha, jnp.float32),
+        jnp.asarray(eta_sum, jnp.float32),
+        jnp.asarray(eta_node, jnp.float32)])              # [3, J]
+    block_leaf_arr = jnp.asarray(block_leaf, jnp.int32)
+
+    if interpret if whole_rows is None else whole_rows:
+        tn, ln, bar, rsq, ssq = _row_round(
+            theta, lam, bar_prev, wires, scales, e_sym, node_scalars,
+            block_leaf_arr, block_size=block_size, interpret=interpret)
+        return tn, ln, bar, rsq[:, 0], ssq[:, 0]
+
+    smem = pl.BlockSpec(memory_space=pltpu.SMEM)
+    vec = pl.BlockSpec((1, block_size), lambda i, b: (i, b))
+    wire_spec = pl.BlockSpec((deg, 1, block_size), lambda i, b: (0, i, b))
+    part = pl.BlockSpec((1, 1), lambda i, b: (i, b))
+
+    theta_new, lam_new, bar, rsq, ssq = pl.pallas_call(
+        functools.partial(_round_kernel, deg),
+        grid=(j, nblocks),
+        in_specs=[
+            smem,                        # block -> leaf table
+            pl.BlockSpec((3, 1), lambda i, b: (0, i),
+                         memory_space=pltpu.SMEM),        # per-node scalars
+            pl.BlockSpec((deg, 1), lambda i, b: (0, i),
+                         memory_space=pltpu.SMEM),        # e_sym
+            pl.BlockSpec((deg, 1, scales.shape[-1]), lambda i, b: (0, i, 0),
+                         memory_space=pltpu.SMEM),        # dequant scales
+            vec, vec, vec,               # theta, lam, bar_prev
+            wire_spec,
+        ],
+        out_specs=[vec, vec, vec, part, part],
+        out_shape=[
+            jax.ShapeDtypeStruct((j, total), theta.dtype),
+            jax.ShapeDtypeStruct((j, total), lam.dtype),
+            jax.ShapeDtypeStruct((j, total), jnp.float32),
+            jax.ShapeDtypeStruct((j, nblocks), jnp.float32),
+            jax.ShapeDtypeStruct((j, nblocks), jnp.float32),
+        ],
+        # in-place: theta->theta_new, lam->lam_new, bar_prev->bar
+        input_output_aliases={4: 0, 5: 1, 6: 2},
+        interpret=interpret,
+    )(block_leaf_arr, node_scalars, e_sym.astype(jnp.float32),
+      scales.astype(jnp.float32), theta, lam, bar_prev, wires)
+    return theta_new, lam_new, bar, rsq.sum(axis=1), ssq.sum(axis=1)

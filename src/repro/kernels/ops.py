@@ -1,10 +1,16 @@
 """Jit'd public wrappers for the Pallas kernels.
 
-``interpret`` defaults to True in this CPU container (the kernels TARGET TPU;
-interpret mode executes the kernel body in Python for validation). On real
-TPU runtimes set ``repro.kernels.ops.INTERPRET = False`` (or pass through).
+``interpret`` is auto-detected: compiled Mosaic on TPU backends, Pallas
+interpret mode (kernel body evaluated with plain HLO ops — jit/shard_map
+traceable) everywhere else. Override order:
+
+  1. ``repro.kernels.ops.INTERPRET = True/False`` (module attribute),
+  2. ``REPRO_PALLAS_INTERPRET=1/0`` in the environment,
+  3. ``jax.default_backend() != "tpu"``.
 """
 from __future__ import annotations
+
+import os
 
 import jax
 import jax.numpy as jnp
@@ -13,7 +19,20 @@ from repro.kernels import consensus_update as _cu
 from repro.kernels import flash_attention as _fa
 from repro.kernels import rwkv6_scan as _rw
 
-INTERPRET = True
+INTERPRET: bool | None = None    # None => auto (env var, then backend probe)
+
+_ENV_VAR = "REPRO_PALLAS_INTERPRET"
+_TRUTHY = ("1", "true", "yes", "on")
+
+
+def interpret_mode() -> bool:
+    """Resolve whether Pallas kernels should run in interpret mode."""
+    if INTERPRET is not None:
+        return bool(INTERPRET)
+    env = os.environ.get(_ENV_VAR, "").strip().lower()
+    if env:
+        return env in _TRUTHY
+    return jax.default_backend() != "tpu"
 
 
 def flash_attention(q, k, v, *, causal: bool = True, window: int = 0,
@@ -24,13 +43,13 @@ def flash_attention(q, k, v, *, causal: bool = True, window: int = 0,
     vt = jnp.swapaxes(v, 1, 2)
     out = _fa.flash_attention(qt, kt, vt, causal=causal, window=window,
                               block_q=block_q, block_k=block_k,
-                              interpret=INTERPRET)
+                              interpret=interpret_mode())
     return jnp.swapaxes(out, 1, 2)
 
 
 def flash_attention_hmajor(q, k, v, **kw):
     """Head-major passthrough: q [B,H,S,hd]."""
-    return _fa.flash_attention(q, k, v, interpret=INTERPRET, **kw)
+    return _fa.flash_attention(q, k, v, interpret=interpret_mode(), **kw)
 
 
 def rwkv6_scan(r, k, v, w, u, s0, *, chunk: int = 32):
@@ -38,7 +57,7 @@ def rwkv6_scan(r, k, v, w, u, s0, *, chunk: int = 32):
     rt, kt, vt = (jnp.swapaxes(t, 1, 2) for t in (r, k, v))
     log_w = jnp.log(jnp.maximum(jnp.swapaxes(w, 1, 2), 1e-38))
     y, s = _rw.rwkv6_scan(rt, kt, vt, log_w, u, s0, chunk=chunk,
-                          interpret=INTERPRET)
+                          interpret=interpret_mode())
     return jnp.swapaxes(y, 1, 2), s
 
 
@@ -47,4 +66,16 @@ def consensus_update(theta, lam, nbr_avg, theta_bar, theta_bar_prev, *,
     return _cu.consensus_update(theta, lam, nbr_avg, theta_bar,
                                 theta_bar_prev, eta_sum=eta_sum,
                                 eta_node=eta_node, step_size=step_size,
-                                block_size=block_size, interpret=INTERPRET)
+                                block_size=block_size, interpret=interpret_mode())
+
+
+def consensus_round(theta, lam, bar_prev, wires, scales, e_sym,
+                    alpha, eta_sum, eta_node, *, block_leaf, block_size,
+                    whole_rows: bool | None = None):
+    """Whole-round fused flat-buffer kernel (see consensus_update module)."""
+    return _cu.consensus_round(theta, lam, bar_prev, wires, scales, e_sym,
+                               alpha, eta_sum, eta_node,
+                               block_leaf=tuple(block_leaf),
+                               block_size=block_size,
+                               interpret=interpret_mode(),
+                               whole_rows=whole_rows)

@@ -48,6 +48,42 @@ def rwkv6_scan_ref(r, k, v, log_w, u, s0):
     return jnp.moveaxis(ys, 0, 2).astype(r.dtype), s_last
 
 
+def consensus_round_ref(theta, lam, bar_prev, wires, scales, e_sym,
+                        alpha, eta_sum, eta_node, *,
+                        block_leaf, block_size: int):
+    """Whole-round flat-buffer oracle (see consensus_update.consensus_round).
+
+    Reductions are evaluated blockwise in the kernel's order so the fused
+    and reference paths agree to float32 round-off, not just statistically.
+    """
+    j, total = theta.shape
+    deg = wires.shape[0]
+    bl = jnp.asarray(block_leaf, jnp.int32)
+    scale_vec = jnp.repeat(scales.astype(jnp.float32)[..., bl], block_size,
+                           axis=-1, total_repeat_length=total)
+    x = wires.astype(jnp.float32) * scale_vec          # [deg, J, total]
+    e = e_sym.astype(jnp.float32)[..., None]
+    nbr_w = (e * x).sum(axis=0)
+    bar = x.sum(axis=0) * (1.0 / deg)
+    eta_sum = jnp.asarray(eta_sum, jnp.float32)
+    nbr = nbr_w / jnp.maximum(eta_sum, 1e-12)[:, None]
+    theta32 = theta.astype(jnp.float32)
+    lam32 = lam.astype(jnp.float32)
+    alpha = jnp.asarray(alpha, jnp.float32)[:, None]
+    theta_new = theta32 - alpha * (2.0 * lam32
+                                   + eta_sum[:, None] * (theta32 - nbr))
+    lam_new = lam32 + 0.5 * eta_sum[:, None] * (theta_new - nbr)
+
+    def blocksum(v):
+        return v.reshape(j, -1, block_size).sum(axis=-1).sum(axis=-1)
+
+    r_sq = blocksum((theta_new - bar) ** 2)
+    dbar = bar - bar_prev.astype(jnp.float32)
+    s_sq = (jnp.asarray(eta_node, jnp.float32) ** 2) * blocksum(dbar * dbar)
+    return (theta_new.astype(theta.dtype), lam_new.astype(lam.dtype),
+            bar, r_sq, s_sq)
+
+
 def consensus_update_ref(theta, lam, nbr_avg, theta_bar, theta_bar_prev,
                          *, eta_sum, eta_node, step_size):
     """Fused consensus round oracle (flat vectors).

@@ -76,6 +76,51 @@ def collective_bytes(hlo_text: str) -> dict:
     return totals
 
 
+def fused_round_roofline(model: "Model", mesh, *, compression: str,
+                         topology: str = "ring", block_size: int = 0) -> dict:
+    """Analytic HBM/wire model of the fused flat-buffer consensus round.
+
+    The Pallas round kernel is opaque to XLA's cost analysis (and runs in
+    interpret mode on CPU dry-runs), so the fused path is accounted from the
+    static FlatLayout instead: per node the kernel reads theta, lam and
+    bar_prev (f32), streams deg rolled wire payloads (int8 or f32), and
+    writes theta, lam and bar — one logical HBM pass over the flat vector
+    per operand. The naive per-leaf path is ~2 read-modify-write accumulator
+    passes per offset plus a dequant materialization on top of the 6
+    elementwise passes the fused kernel replaces.
+    """
+    from repro.core.graph import build_graph
+    from repro.optim import flatten
+
+    import jax.numpy as jnp
+
+    ap = model.abstract_params()
+    bs = block_size or flatten.auto_block_size(ap)
+    lay = flatten.FlatLayout.for_tree(ap, block_size=bs, node_axis=False)
+    j = int(mesh.shape["pod"])
+    deg = len(build_graph(topology, j).neighbor_offsets_ring()) or 1
+    n = lay.total
+    tb = jnp.dtype(lay.wire_dtype).itemsize            # theta element bytes
+    wire_bytes = deg * lay.wire_bytes(compression)     # DCN per node/round
+    # kernel: read theta (tb) + lam/bar_prev (f32) + deg wires,
+    #         write theta (tb) + lam/bar (f32)
+    fused_hbm = n * (2 * tb + 4 * 4) + deg * lay.wire_bytes(compression)
+    # naive per-leaf path adds ~2 accumulator read-modify-write passes per
+    # offset plus a full dequant materialization (all f32)
+    naive_hbm = fused_hbm + deg * n * 4 * 3
+    return {
+        "flat_elems": n, "block_size": bs, "blocks": lay.num_blocks,
+        "padding_frac": round(lay.waste_frac, 4),
+        "wire_bytes_per_round": wire_bytes,
+        "fused_hbm_bytes": fused_hbm,
+        "fused_hbm_passes": round(fused_hbm / (n * 4), 2),
+        "naive_hbm_bytes": naive_hbm,
+        "naive_hbm_passes": round(naive_hbm / (n * 4), 2),
+        "fused_kernel_s": fused_hbm / HBM_BW,
+        "naive_s": naive_hbm / HBM_BW,
+    }
+
+
 def roofline_terms(flops: float, hbm_bytes: float, coll_bytes: float,
                    chips: int) -> dict:
     """Three-term roofline (seconds). cost_analysis is per-device already."""
@@ -295,6 +340,8 @@ def lower_cell(cfg: ArchConfig, cell: ShapeCell, *, multi_pod: bool,
         rec["consensus"] = _corrected_record(cfg, cell, mesh,
                                              consensus=True,
                                              which="consensus")
+        rec["consensus"]["fused_round_model"] = fused_round_roofline(
+            model, mesh, compression=KNOBS["compression"])
     rec["lower_compile_s"] = round(time.time() - t0, 1)
     main = rec[key]
     mf = model_flops(model, cell)

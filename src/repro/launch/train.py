@@ -84,8 +84,10 @@ def main(argv=None):
         batch_per_node=args.batch_per_node,
         num_nodes=trainer.num_nodes, seed=args.seed))
 
+    # local step stays undonated: with_retries may replay it with the same
+    # state buffers; the consensus round is never retried, so donate there.
     train = jax.jit(trainer.train_step)
-    cons = jax.jit(trainer.consensus_step)
+    _, cons = trainer.jit_step_fns()
     monitor = StragglerMonitor(trainer.num_nodes)
     step_fn = with_retries(lambda s, b: train(s, b), RetryPolicy())
 

@@ -27,6 +27,7 @@ from jax.sharding import PartitionSpec as P
 
 from repro.configs.base import ArchConfig
 from repro.distributed.sharding import current_mesh
+from repro.distributed.sharding import axis_size as shd_axis_size
 from repro.models.params import ParamDef
 
 
@@ -117,7 +118,7 @@ def _moe_shard_a2a(cfg, ep_axis):
         b, s, d = x.shape
         x_flat = x.reshape(-1, d)
         t_loc = x_flat.shape[0]
-        ep = jax.lax.axis_size(ep_axis)
+        ep = shd_axis_size(ep_axis)
         e_local = e.num_experts // ep
         capacity = max(e.top_k, int(t_loc * e.top_k / ep
                                     * e.capacity_factor))
@@ -155,7 +156,7 @@ def _moe_shard_repl(cfg, ep_axis):
         b, s, d = x.shape
         x_flat = x.reshape(-1, d)
         t_loc = x_flat.shape[0]
-        ep = jax.lax.axis_size(ep_axis)
+        ep = shd_axis_size(ep_axis)
         e_local = e.num_experts // ep
         my = jax.lax.axis_index(ep_axis)
         top_i, top_w = _route(cfg, router_w, x_flat)
@@ -195,7 +196,8 @@ def moe_apply(cfg: ArchConfig, p: dict, x: jax.Array, *,
             or cfg.moe.num_experts % mesh.shape["model"] != 0:
         return moe_ref(cfg, p, x)
 
-    abstract = jax.sharding.get_abstract_mesh()
+    from repro.distributed.sharding import abstract_mesh
+    abstract = abstract_mesh()
     if abstract is not None and abstract.shape_tuple:
         manual_already = {name for name, ty in
                           zip(abstract.axis_names, abstract.axis_types)
@@ -225,10 +227,10 @@ def moe_apply(cfg: ArchConfig, p: dict, x: jax.Array, *,
     # (hlo_instruction.cc "Invalid binary instruction opcode copy");
     # axes not used in specs are simply replicated-manual.
     axis_names = set(run_mesh.axis_names) - manual_already
-    return jax.shard_map(
-        fn, mesh=run_mesh,
+    from repro.distributed.sharding import shard_map_compat
+    return shard_map_compat(
+        fn, run_mesh,
         in_specs=(P(None, None), w_spec, w_spec, w_spec, x_spec),
         out_specs=out_spec,
-        axis_names=frozenset(axis_names),
-        check_vma=False,
+        manual_axes=axis_names,
     )(p["router"], p["wg"], p["wu"], p["wd"], x)

@@ -17,14 +17,18 @@ Compared to synchronous DP all-reduce every step, cross-pod traffic drops by
 ~H x and each edge's pull strength eta_ij adapts per the paper — the
 "adaptive, dynamic network topology" of Fig. 1c realized on a TPU fabric.
 
-Implementation: ``jax.shard_map`` manual over ``pod`` only; ``data``/``model``
-stay auto so GSPMD handles within-pod parallelism (FSDP/TP/EP) untouched.
-State leaves carry a leading node axis [J, ...] sharded P('pod', ...).
+Implementation: the round runs on the flat-buffer engine (``optim.flatten``,
+``docs/consensus_engine.md``): params pack into one [J, total] buffer
+(leading node axis sharded P('pod', ...)), the exchange is ``jnp.roll`` on
+the node axis (GSPMD lowers it to one collective-permute per graph offset),
+and the fused update is a single Pallas call inside a shard_map that is
+manual over ALL mesh axes. No partial-manual regions: GSPMD-inside-manual
+miscompiles at 512 devices (spmd_partitioner_util.cc crash), so everything
+else stays plain GSPMD with data/model auto (FSDP/TP/EP untouched).
 """
 from __future__ import annotations
 
 import dataclasses
-import functools
 from typing import Any, NamedTuple
 
 import jax
@@ -37,7 +41,9 @@ from repro.core.penalty import (PenaltyConfig, PenaltyState,
                                 init_penalty_state, update_penalty)
 from repro.models.model import Model, arch_rules
 from repro.distributed import sharding as shd
+from repro.kernels import ref as kref
 from repro.optim import adamw as adamw_lib
+from repro.optim import flatten
 
 
 @dataclasses.dataclass(frozen=True)
@@ -47,15 +53,16 @@ class ConsensusConfig:
     local_steps: int = 8           # H — local optimizer steps per round
     prox_step: float = 0.5         # alpha in the prox pull (scaled by curv.)
     compression: str = "none"      # none | int8 — exchange quantization
-    use_fused_kernel: bool = False  # Pallas consensus_update (TPU hot path)
+    use_fused_kernel: bool = True  # Pallas consensus_round (interpret on CPU)
+    block_size: int = 0            # flat-layout block; 0 => auto
     grad_rs: bool = False          # reduce-scatter grads to param shards
 
 
 class TrainState(NamedTuple):
     params: Any            # [J, ...] per-node replicas, P('pod', ...)
     opt: adamw_lib.AdamWState
-    lam: Any               # [J, ...] dual variables
-    theta_bar_prev: Any    # [J, ...] neighbor mean at last round (eq. 5)
+    lam: jax.Array         # [J, total] flat dual buffer (FlatLayout)
+    theta_bar_prev: jax.Array  # [J, total] flat neighbor mean (eq. 5)
     penalty: PenaltyState  # [J, J] replicated
     step: jax.Array
 
@@ -85,6 +92,11 @@ class ConsensusTrainer:
         rules = arch_rules(model.cfg, mesh)
         rules["batch"] = ("data",)
         self.inner_rules = rules
+        # static flat-buffer layout for the consensus engine
+        ap = model.abstract_params()
+        bs = consensus.block_size or flatten.auto_block_size(ap)
+        self.layout = flatten.FlatLayout.for_tree(ap, block_size=bs,
+                                                  node_axis=False)
 
     # ------------------------------------------------------------ state ----
     def _node_stack(self, tree):
@@ -100,10 +112,12 @@ class ConsensusTrainer:
         opt = adamw_lib.AdamWState(step=opt1.step,
                                    m=self._node_stack(opt1.m),
                                    v=self._node_stack(opt1.v))
-        zeros = jax.tree_util.tree_map(
-            lambda x: jnp.zeros_like(x, jnp.float32), params)
+        # two distinct buffers (never aliased: the state may be donated)
+        flat_shape = (self.num_nodes, self.layout.total)
         return TrainState(
-            params=params, opt=opt, lam=zeros, theta_bar_prev=zeros,
+            params=params, opt=opt,
+            lam=jnp.zeros(flat_shape, jnp.float32),
+            theta_bar_prev=jnp.zeros(flat_shape, jnp.float32),
             penalty=init_penalty_state(self.ccfg.penalty, self.num_nodes),
             step=jnp.zeros((), jnp.int32))
 
@@ -120,13 +134,13 @@ class ConsensusTrainer:
         opt1 = adamw_lib.abstract_state(self.acfg, ap)
         opt = adamw_lib.AdamWState(step=opt1.step, m=stack(opt1.m),
                                    v=stack(opt1.v))
-        zeros = jax.tree_util.tree_map(
-            lambda s: jax.ShapeDtypeStruct(s.shape, jnp.float32), params)
+        flat0 = jax.ShapeDtypeStruct((self.num_nodes, self.layout.total),
+                                     jnp.float32)
         pen = init_penalty_state(self.ccfg.penalty, self.num_nodes)
         pen = jax.tree_util.tree_map(
             lambda x: jax.ShapeDtypeStruct(x.shape, x.dtype), pen)
-        return TrainState(params=params, opt=opt, lam=zeros,
-                          theta_bar_prev=zeros, penalty=pen,
+        return TrainState(params=params, opt=opt, lam=flat0,
+                          theta_bar_prev=flat0, penalty=pen,
                           step=jax.ShapeDtypeStruct((), jnp.int32))
 
     def state_shardings(self) -> TrainState:
@@ -165,10 +179,13 @@ class ConsensusTrainer:
         pen = jax.tree_util.tree_map(lambda _: rep,
                                      init_penalty_state(self.ccfg.penalty,
                                                         self.num_nodes))
+        # flat buffers: node-sharded rows, replicated within the pod (the
+        # fused kernel consumes whole per-node rows; see docs/consensus_engine)
+        flat_sh = NamedSharding(mesh, P("pod"))
         return TrainState(
             params=params_sh,
             opt=adamw_lib.AdamWState(step=rep, m=opt_m, v=opt_v),
-            lam=lead(pspec), theta_bar_prev=lead(pspec),
+            lam=flat_sh, theta_bar_prev=flat_sh,
             penalty=pen, step=rep)
 
     # ------------------------------------------------------- local steps ----
@@ -249,50 +266,71 @@ class ConsensusTrainer:
         return new, {"loss": loss.mean(), "grad_norm": gn}
 
     # --------------------------------------------------- consensus round ----
-    def _encode_wire(self, tree):
-        """Quantize for the exchange. The int8 payload (+ scalar scale) is
-        what actually crosses pods — dequantization happens post-roll, so
-        the collective-permute moves 1 byte/param instead of 2-4."""
-        if self.ccfg.compression != "int8":
-            return tree
+    def _fused_round(self, theta_flat, lam_flat, bar_prev, wires, scales,
+                     e_stack, alpha, sym_sum, eta_node):
+        """One shard_map'd Pallas call over the whole flat buffer.
 
-        def q(x):
-            axes = tuple(range(1, x.ndim))          # per-node absmax scale
-            scale = (jnp.maximum(jnp.abs(x.astype(jnp.float32)).max(
-                axis=axes, keepdims=True), 1e-12) / 127.0)
-            xq = jnp.clip(jnp.round(x.astype(jnp.float32) / scale),
-                          -127, 127).astype(jnp.int8)
-            return {"q": xq, "scale": scale}
+        Manual over ALL mesh axes with nothing but the kernel inside — the
+        historical GSPMD-inside-manual miscompile does not apply because the
+        region contains no auto-sharded ops. Each device runs the kernel on
+        its pod's node row (replicated across the in-pod axes).
+        """
+        from repro.kernels import ops as kops
 
-        return jax.tree_util.tree_map(q, tree)
+        lay = self.layout
+        block_leaf = tuple(lay.block_leaf.tolist())
 
-    def _decode_wire(self, tree, like):
-        if self.ccfg.compression != "int8":
-            return tree
-        return jax.tree_util.tree_map(
-            lambda enc, ref: (enc["q"].astype(jnp.float32)
-                              * enc["scale"]).astype(ref.dtype),
-            tree, like, is_leaf=lambda x: isinstance(x, dict) and "q" in x)
+        def local(theta, lam, barp, w, s, e, nsc):
+            tn, ln, bar, rsq, ssq = kops.consensus_round(
+                theta, lam, barp, w, s, e, nsc[0], nsc[1], nsc[2],
+                block_leaf=block_leaf, block_size=lay.block_size)
+            return tn, ln, bar, rsq, ssq
+
+        node_sc = jnp.stack([alpha, sym_sum, eta_node], axis=0)   # [3, J]
+        pod = P("pod")
+        fn = shd.shard_map_compat(
+            local, self.mesh,
+            in_specs=(P("pod", None), P("pod", None), P("pod", None),
+                      P(None, "pod", None), P(None, "pod", None),
+                      P(None, "pod"), P(None, "pod")),
+            out_specs=(P("pod", None), P("pod", None), P("pod", None),
+                       pod, pod))
+        return fn(theta_flat, lam_flat, bar_prev, wires, scales,
+                  e_stack, node_sc)
 
     def consensus_step(self, state: TrainState, probe_batch: Any
                        ) -> tuple[TrainState, dict]:
-        """One ADMM consensus round along the pod axis.
+        """One ADMM consensus round along the pod axis (flat-buffer engine).
 
-        Implemented with ``jnp.roll`` on the pod-sharded node axis (GSPMD
-        lowers it to collective-permute across pods) plus vmapped objective
-        probes — no partial-manual shard_map here: the XLA SPMD partitioner
-        miscompiles GSPMD-inside-manual at 512 devices (crash in
-        spmd_partitioner_util.cc), and the roll/vmap formulation expresses
-        the same communication pattern.
+        Per round: pack params once into the [J, total] wire buffer, then
+
+          * exchange — ONE ``jnp.roll`` per graph offset on the pod-sharded
+            node axis (GSPMD lowers it to a collective-permute of the whole
+            contiguous buffer; int8 wire carries its bitcast scales in-band),
+          * objective probes f_i(theta_j) on the held-out probe batch
+            (eq. 7 kappas) straight off the rolled payloads,
+          * ONE fused Pallas call (``kernels.consensus_round``) for
+            dequant + neighbor means + prox pull + dual update + both
+            residual reductions (eq. 5) — or the blockwise-identical jnp
+            reference when ``use_fused_kernel=False``,
+          * the per-edge penalty update (eq. 4/6/9/12) via
+            ``repro.core.penalty``.
+
+        No partial-manual shard_map around GSPMD ops: the XLA SPMD
+        partitioner miscompiles GSPMD-inside-manual at 512 devices; the
+        fused kernel runs under a fully-manual region instead.
         """
         if self.num_nodes <= 1:
             return state, {"r_max": jnp.zeros(()), "eta_mean": jnp.asarray(
                 self.ccfg.penalty.eta0)}
         j = self.num_nodes
         offsets = self.offsets
+        deg = len(offsets)
         adj = jnp.asarray(self.graph.adj)
         pcfg = self.ccfg.penalty
         idx = jnp.arange(j)
+        lay = self.layout
+        int8 = self.ccfg.compression == "int8"
 
         # MoE blocks carry an inner expert-parallel shard_map, which XLA
         # cannot batch under vmap — probe those sequentially per node
@@ -313,85 +351,56 @@ class ConsensusTrainer:
         # probe own objective (pre-update params, eq. 7 semantics)
         f_self = vloss(state.params, probe_batch)              # [J]
 
-        theta_wire = self._encode_wire(state.params)
+        # pack in the params' native float dtype: the uncompressed wire then
+        # moves the same bytes/param as the old per-leaf exchange (bf16 = 2B)
+        theta_flat = lay.pack(state.params, dtype=lay.wire_dtype)
+        wire = lay.encode_int8(theta_flat) if int8 else theta_flat
+
         eta = state.penalty.eta
+        ones = jnp.ones((j, lay.num_leaves), jnp.float32)
         sym_sum = jnp.zeros((j,), jnp.float32)
-        nbr_w = None
-        nbr_plain = None
         f_nbr = jnp.zeros((j, j), jnp.float32)
+        payloads, scale_rows, e_rows = [], [], []
         for off in offsets:
-            # rolled[i] = theta_{(i+off) % j}: one collective-permute on pod
-            rolled = jax.tree_util.tree_map(
-                lambda x: jnp.roll(x, -off, axis=0), theta_wire)
-            rolled = self._decode_wire(rolled, state.params)
+            # rolled[i] = wire_{(i+off) % j}: ONE collective-permute on pod
+            # moving the whole contiguous buffer (payload + in-band scales).
+            # The barrier pins the exchange to the wire dtype — without it
+            # XLA hoists the consumers' f32 upcast above the permute and a
+            # bf16 wire would cross the DCN at 4 B/param.
+            rolled = jax.lax.optimization_barrier(
+                jnp.roll(wire, -off, axis=0))
+            payload, scales = lay.decode_split(rolled)
             jidx = (idx + off) % j
-            f_off = vloss(rolled, probe_batch)                 # [J]
-            f_nbr = f_nbr.at[idx, jidx].set(f_off)
+            f_off = vloss(lay.unpack(payload, scales=scales), probe_batch)
+            # scatter-free write of F[i, (i+off)%j]: static circulant mask
+            # (an .at[].set scatter costs extra collective-permutes on SPMD)
+            mask = jnp.asarray(np.roll(np.eye(j), off, axis=1), jnp.float32)
+            f_nbr = f_nbr + f_off[:, None] * mask
             e_sym = 0.5 * (eta[idx, jidx] + eta[jidx, idx])    # [J]
             sym_sum = sym_sum + e_sym
+            payloads.append(payload)
+            scale_rows.append(ones if scales is None else scales)
+            e_rows.append(e_sym)
 
-            def wsum(a, scale=e_sym):
-                bshape = (j,) + (1,) * (a.ndim - 1)
-                return a.astype(jnp.float32) * scale.reshape(bshape)
+        wires = jnp.stack(payloads)                 # [deg, J, total]
+        scales = jnp.stack(scale_rows)              # [deg, J, L]
+        e_stack = jnp.stack(e_rows)                 # [deg, J]
 
-            addw = jax.tree_util.tree_map(wsum, rolled)
-            nbr_w = addw if nbr_w is None else jax.tree_util.tree_map(
-                jnp.add, nbr_w, addw)
-            addp = jax.tree_util.tree_map(
-                lambda a: a.astype(jnp.float32), rolled)
-            nbr_plain = addp if nbr_plain is None else \
-                jax.tree_util.tree_map(jnp.add, nbr_plain, addp)
-
-        deg = float(len(offsets))
-        theta_bar = jax.tree_util.tree_map(lambda a: a / deg, nbr_plain)
-
-        def per_node(v, a):
-            return v.reshape((j,) + (1,) * (a.ndim - 1))
-
-        nbr_avg = jax.tree_util.tree_map(
-            lambda a: a / per_node(jnp.maximum(sym_sum, 1e-12), a), nbr_w)
-
-        # -- prox pull + dual update + residuals (eq. 5) -------------------
+        # -- fused round: dequant + means + prox + dual + residuals --------
         alpha = self.ccfg.prox_step / (1.0 + 2.0 * sym_sum)    # [J]
         eta_node = sym_sum / deg
-        r_sq = jnp.zeros((j,), jnp.float32)
-        s_sq = jnp.zeros((j,), jnp.float32)
-        th_out, lam_out = [], []
-        tdef = jax.tree_util.tree_structure(state.params)
-        for th, lm, ba, bp, av in zip(
-                jax.tree_util.tree_leaves(state.params),
-                jax.tree_util.tree_leaves(state.lam),
-                jax.tree_util.tree_leaves(theta_bar),
-                jax.tree_util.tree_leaves(state.theta_bar_prev),
-                jax.tree_util.tree_leaves(nbr_avg)):
-            if self.ccfg.use_fused_kernel:
-                from repro.kernels import ops as kops
-                tn, ln, rs, ss = jax.vmap(
-                    lambda t, l, a_, b_, p_, es, en, st: kops.consensus_update(
-                        t.reshape(-1), l.reshape(-1), a_.reshape(-1),
-                        b_.reshape(-1), p_.reshape(-1), eta_sum=es,
-                        eta_node=en, step_size=st,
-                        block_size=int(np.prod(th.shape[1:]))))(
-                    th, lm, av, ba, bp, sym_sum, eta_node, alpha)
-                tn = tn.reshape(th.shape)
-                ln = ln.reshape(lm.shape)
-            else:
-                t32 = th.astype(jnp.float32)
-                l32 = lm.astype(jnp.float32)
-                es = per_node(sym_sum, th)
-                tn = t32 - per_node(alpha, th) * (2.0 * l32
-                                                  + es * (t32 - av))
-                ln = l32 + 0.5 * es * (tn - av)
-                axes = tuple(range(1, th.ndim))
-                rs = jnp.sum((tn - ba) ** 2, axis=axes)
-                ss = (eta_node ** 2) * jnp.sum((ba - bp) ** 2, axis=axes)
-            th_out.append(tn.astype(th.dtype))
-            lam_out.append(ln)
-            r_sq, s_sq = r_sq + rs, s_sq + ss
+        if self.ccfg.use_fused_kernel:
+            theta_new, lam_new, bar_new, r_sq, s_sq = self._fused_round(
+                theta_flat, state.lam, state.theta_bar_prev, wires, scales,
+                e_stack, alpha, sym_sum, eta_node)
+        else:
+            theta_new, lam_new, bar_new, r_sq, s_sq = \
+                kref.consensus_round_ref(
+                    theta_flat, state.lam, state.theta_bar_prev, wires,
+                    scales, e_stack, alpha, sym_sum, eta_node,
+                    block_leaf=lay.block_leaf, block_size=lay.block_size)
 
-        params_new = jax.tree_util.tree_unflatten(tdef, th_out)
-        lam_new = jax.tree_util.tree_unflatten(tdef, lam_out)
-        bar_new = theta_bar
+        params_new = lay.unpack(theta_new)
         r_norm = jnp.sqrt(r_sq)
         s_norm = jnp.sqrt(s_sq)
 
@@ -409,5 +418,15 @@ class ConsensusTrainer:
         return new, metrics
 
     # ------------------------------------------------------------ driver ----
+    def jit_step_fns(self):
+        """Jitted (train_step, consensus_step) with the state DONATED.
+
+        Donation lets XLA reuse the state buffers for the outputs — combined
+        with the kernel's input/output aliasing the flat theta/lam/bar
+        buffers are updated in place, not copied once per round.
+        """
+        return (jax.jit(self.train_step, donate_argnums=(0,)),
+                jax.jit(self.consensus_step, donate_argnums=(0,)))
+
     def should_sync(self, step: int) -> bool:
         return self.num_nodes > 1 and (step + 1) % self.ccfg.local_steps == 0

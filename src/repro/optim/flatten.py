@@ -1,0 +1,208 @@
+"""Flat-buffer packing for the consensus engine — one HBM pass per round.
+
+The consensus round is pure elementwise math over every parameter, so its
+natural data layout is not a pytree but one contiguous vector per node.
+``FlatLayout`` computes a *static* layout table for a parameter pytree —
+element offset / true size / padded size / shape / dtype per leaf — and packs
+the per-node state (params, duals, neighbor means) into a single
+``[J, total]`` buffer. Everything downstream gets simpler and faster:
+
+  * the neighbor exchange is ONE collective-permute per graph offset over
+    contiguous bytes (instead of one per leaf),
+  * the fused Pallas kernel (``repro.kernels.consensus_update
+    .consensus_round``) runs once over the whole vector,
+  * int8 wire scales ride *inside* the same buffer (bitcast to int8 and
+    appended as a tail) so quantized exchange still needs only one permute.
+
+Layout invariants:
+
+  * every leaf is padded to a multiple of ``block_size`` and starts
+    block-aligned, so each kernel block maps to exactly ONE leaf — the
+    per-block dequantization scale is a scalar-prefetch lookup
+    ``scales[leaf_of_block[b]]``;
+  * padding is zero-filled by ``pack`` and kept zero by the round math
+    (theta = lam = nbr = bar = 0 on padding => all updates and both residual
+    reductions contribute exactly 0), which is what makes the padded
+    reductions equal the masked ones.
+
+All tables are static numpy / Python ints — only buffer contents are traced.
+"""
+from __future__ import annotations
+
+from typing import Any, NamedTuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def auto_block_size(tree: Any, *, lo: int = 128, hi: int = 65536) -> int:
+    """Pick a layout block size for a per-node parameter tree.
+
+    The per-leaf alignment wastes < block_size elements per leaf, so the
+    block should track the mean leaf size: LM-scale leaves (>= 64k elements)
+    get the full 64k Pallas block, tiny debug models get small blocks and
+    negligible padding. Power of two, clamped to [lo, hi].
+    """
+    sizes = [int(np.prod(x.shape, dtype=np.int64)) or 1
+             for x in jax.tree_util.tree_leaves(tree)]
+    if not sizes:
+        return lo
+    mean = sum(sizes) / len(sizes)
+    bs = lo
+    while bs < hi and bs < mean:
+        bs *= 2
+    return bs
+
+
+class LeafSpec(NamedTuple):
+    offset: int                 # element offset into the flat axis (aligned)
+    size: int                   # true elements per node
+    padded: int                 # size rounded up to the block multiple
+    shape: tuple[int, ...]      # per-node shape (leading node axis removed)
+    dtype: Any                  # original leaf dtype
+
+
+class FlatLayout:
+    """Static layout table mapping a pytree to one flat [J, total] buffer."""
+
+    def __init__(self, treedef, leaves: tuple[LeafSpec, ...],
+                 block_size: int):
+        self.treedef = treedef
+        self.leaves = leaves
+        self.block_size = int(block_size)
+        self.total = (leaves[-1].offset + leaves[-1].padded) if leaves else 0
+        assert self.total % self.block_size == 0, (self.total, block_size)
+        self.num_blocks = self.total // self.block_size
+        self.num_leaves = len(leaves)
+        block_leaf = np.zeros((self.num_blocks,), np.int32)
+        for li, lf in enumerate(leaves):
+            block_leaf[lf.offset // self.block_size:
+                       (lf.offset + lf.padded) // self.block_size] = li
+        self.block_leaf = block_leaf          # [num_blocks] leaf id per block
+
+    # ---------------------------------------------------------- factory ----
+    @classmethod
+    def for_tree(cls, tree: Any, *, block_size: int = 65536,
+                 node_axis: bool = True) -> "FlatLayout":
+        """Build the table from arrays or ShapeDtypeStructs.
+
+        ``node_axis=True`` treats leaves as ``[J, ...]`` stacks and lays out
+        the per-node tail shape (the trainer's case).
+        """
+        arrs, treedef = jax.tree_util.tree_flatten(tree)
+        specs: list[LeafSpec] = []
+        off = 0
+        bs = int(block_size)
+        for x in arrs:
+            shape = tuple(x.shape[1:] if node_axis else x.shape)
+            size = int(np.prod(shape, dtype=np.int64)) if shape else 1
+            padded = -(-size // bs) * bs
+            specs.append(LeafSpec(off, size, padded, shape,
+                                  jnp.dtype(x.dtype)))
+            off += padded
+        return cls(treedef, tuple(specs), bs)
+
+    @property
+    def waste_frac(self) -> float:
+        """Fraction of the flat buffer that is alignment padding."""
+        true = sum(lf.size for lf in self.leaves)
+        return 1.0 - true / self.total if self.total else 0.0
+
+    @property
+    def wire_dtype(self):
+        """Dtype of the uncompressed wire buffer: the leaves' common float
+        type (bf16 params -> bf16 wire, matching the pre-flat per-leaf
+        exchange; any f32 leaf promotes the whole buffer)."""
+        if not self.leaves:
+            return jnp.float32
+        return jnp.result_type(*[lf.dtype for lf in self.leaves])
+
+    def wire_bytes(self, compression: str) -> int:
+        """Bytes per node moved by ONE graph-offset permute of the wire.
+
+        The single source of truth for wire accounting — the dry-run
+        roofline and the benchmarks both read this.
+        """
+        if compression == "int8":
+            return self.total + 4 * self.num_leaves   # payload + scale tail
+        return self.total * jnp.dtype(self.wire_dtype).itemsize
+
+    # ------------------------------------------------------- pack/unpack ----
+    def pack(self, tree: Any, dtype=jnp.float32) -> jax.Array:
+        """Pytree of [J, ...] leaves -> [J, total] buffer (zero padding)."""
+        arrs = self.treedef.flatten_up_to(tree)
+        j = arrs[0].shape[0]
+        parts = []
+        for lf, x in zip(self.leaves, arrs):
+            flat = x.astype(dtype).reshape(j, lf.size)
+            if lf.padded > lf.size:
+                flat = jnp.pad(flat, ((0, 0), (0, lf.padded - lf.size)))
+            parts.append(flat)
+        return jnp.concatenate(parts, axis=1)
+
+    def unpack(self, buf: jax.Array, *, scales: jax.Array | None = None
+               ) -> Any:
+        """[J, total] buffer -> pytree of [J, ...] leaves in leaf dtype.
+
+        ``scales`` ([J, num_leaves], optional) dequantizes an int8 payload:
+        leaf li is multiplied by ``scales[:, li]``. The slice/scale/reshape
+        chain is elementwise per leaf, so XLA fuses it into the consumer —
+        no standalone full-size materialization pass.
+        """
+        j = buf.shape[0]
+        out = []
+        for li, lf in enumerate(self.leaves):
+            seg = buf[:, lf.offset:lf.offset + lf.size]
+            if scales is not None:
+                seg = seg.astype(jnp.float32) * scales[:, li:li + 1]
+            out.append(seg.reshape((j,) + lf.shape).astype(lf.dtype))
+        return jax.tree_util.tree_unflatten(self.treedef, out)
+
+    # -------------------------------------------------------- wire codec ----
+    def leaf_scales(self, buf: jax.Array) -> jax.Array:
+        """Per-node, per-leaf int8 absmax scales [J, num_leaves] (f32)."""
+        cols = []
+        for lf in self.leaves:
+            seg = buf[:, lf.offset:lf.offset + lf.size]
+            amax = jnp.abs(seg.astype(jnp.float32)).max(axis=1)
+            cols.append(jnp.maximum(amax, 1e-12) / 127.0)
+        return jnp.stack(cols, axis=1).astype(jnp.float32)
+
+    def block_scales(self, scales: jax.Array) -> jax.Array:
+        """Expand per-leaf scales [..., num_leaves] -> per-block
+        [..., num_blocks] via the static block->leaf table."""
+        return scales[..., self.block_leaf]
+
+    def scale_vector(self, scales: jax.Array) -> jax.Array:
+        """Per-leaf scales [..., num_leaves] -> full-width [..., total]."""
+        return jnp.repeat(self.block_scales(scales), self.block_size,
+                          axis=-1, total_repeat_length=self.total)
+
+    def encode_int8(self, buf: jax.Array) -> jax.Array:
+        """f32 [J, total] -> int8 wire [J, total + 4*num_leaves].
+
+        The payload is absmax-quantized per (node, leaf); the f32 scales are
+        bitcast to int8 and appended, so the whole wire message is ONE
+        contiguous int8 buffer — one collective-permute moves payload and
+        scales together.
+        """
+        scales = self.leaf_scales(buf)                      # [J, L]
+        q = jnp.clip(jnp.round(buf / self.scale_vector(scales)),
+                     -127, 127).astype(jnp.int8)
+        tail = jax.lax.bitcast_convert_type(scales, jnp.int8)  # [J, L, 4]
+        return jnp.concatenate([q, tail.reshape(q.shape[0], -1)], axis=1)
+
+    def decode_split(self, wire: jax.Array
+                     ) -> tuple[jax.Array, jax.Array | None]:
+        """int8 wire -> (payload [J, total] int8, scales [J, L] f32).
+
+        For an uncompressed (float) wire returns (wire, None).
+        """
+        if wire.dtype != jnp.int8:
+            return wire, None
+        payload = wire[:, :self.total]
+        tail = wire[:, self.total:].reshape(wire.shape[0],
+                                            self.num_leaves, 4)
+        scales = jax.lax.bitcast_convert_type(tail, jnp.float32)
+        return payload, scales

@@ -26,10 +26,10 @@ from repro.optim import ConsensusConfig, ConsensusTrainer
 from repro.optim.adamw import AdamWConfig
 from repro.core.penalty import PenaltyConfig
 from repro.data import DataConfig, SyntheticTokens
+from repro.launch.mesh import make_mesh
 
 out = {}
-mesh = jax.make_mesh((2,2,2), ("pod","data","model"),
-                     axis_types=(jax.sharding.AxisType.Auto,)*3)
+mesh = make_mesh((2,2,2), ("pod","data","model"))
 
 # --- dense arch: loss decreases, consensus keeps replicas close ---------
 cfg = get_reduced_config("qwen3-4b")

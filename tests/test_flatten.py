@@ -1,0 +1,118 @@
+"""Unit tests for the flat-buffer layout table (repro.optim.flatten)."""
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.optim import flatten
+
+from proptest import sweep
+
+
+def _tree(rng, j=3, dtypes=(np.float32, np.float32, np.float32)):
+    return {
+        "w": jnp.asarray(rng.normal(size=(j, 5, 37)).astype(dtypes[0])),
+        "b": jnp.asarray(rng.normal(size=(j, 11)).astype(dtypes[1])),
+        "scalarish": jnp.asarray(rng.normal(size=(j,)).astype(dtypes[2])),
+    }
+
+
+def test_layout_table_is_block_aligned():
+    rng = np.random.default_rng(0)
+    tree = _tree(rng)
+    lay = flatten.FlatLayout.for_tree(tree, block_size=64)
+    assert lay.total % lay.block_size == 0
+    for lf in lay.leaves:
+        assert lf.offset % lay.block_size == 0
+        assert lf.padded % lay.block_size == 0
+        assert lf.padded >= lf.size > 0
+    # block->leaf table covers every block, monotonically
+    assert lay.block_leaf.shape == (lay.num_blocks,)
+    assert lay.block_leaf[0] == 0
+    assert (np.diff(lay.block_leaf) >= 0).all()
+    assert lay.block_leaf[-1] == lay.num_leaves - 1
+
+
+def test_pack_unpack_roundtrip_mixed_dtypes():
+    rng = np.random.default_rng(1)
+    tree = _tree(rng, dtypes=(np.float32, np.float16, np.float32))
+    lay = flatten.FlatLayout.for_tree(tree, block_size=128)
+    buf = lay.pack(tree)
+    assert buf.shape == (3, lay.total) and buf.dtype == jnp.float32
+    back = lay.unpack(buf)
+    for k in tree:
+        assert back[k].dtype == tree[k].dtype, k
+        np.testing.assert_allclose(np.asarray(back[k], np.float32),
+                                   np.asarray(tree[k], np.float32),
+                                   atol=1e-3 if tree[k].dtype == jnp.float16
+                                   else 0)
+
+
+def test_padding_is_zero_filled():
+    rng = np.random.default_rng(2)
+    tree = {"a": jnp.asarray(rng.normal(size=(2, 100)).astype(np.float32))}
+    lay = flatten.FlatLayout.for_tree(tree, block_size=64)  # pads 100 -> 128
+    buf = np.asarray(lay.pack(tree))
+    assert lay.total == 128
+    assert (buf[:, 100:] == 0).all()
+
+
+def test_int8_wire_roundtrip_with_inband_scales():
+    rng = np.random.default_rng(3)
+    tree = _tree(rng)
+    lay = flatten.FlatLayout.for_tree(tree, block_size=64)
+    buf = lay.pack(tree)
+    wire = lay.encode_int8(buf)
+    assert wire.dtype == jnp.int8
+    assert wire.shape == (3, lay.total + 4 * lay.num_leaves)
+    payload, scales = lay.decode_split(wire)
+    assert payload.shape == (3, lay.total)
+    assert scales.shape == (3, lay.num_leaves)
+    # scales survive the int8 bitcast exactly
+    np.testing.assert_array_equal(np.asarray(scales),
+                                  np.asarray(lay.leaf_scales(buf)))
+    # absmax int8: error bounded by scale/2 per element
+    deq = payload.astype(jnp.float32) * lay.scale_vector(scales)
+    err = np.abs(np.asarray(deq - buf))
+    bound = np.asarray(lay.scale_vector(scales)) * 0.5 + 1e-7
+    assert (err <= bound).all()
+    # float wire passes through decode_split untouched
+    p2, s2 = lay.decode_split(buf)
+    assert s2 is None and p2 is buf
+
+
+def test_unpack_with_scales_dequantizes():
+    rng = np.random.default_rng(4)
+    tree = _tree(rng)
+    lay = flatten.FlatLayout.for_tree(tree, block_size=64)
+    buf = lay.pack(tree)
+    payload, scales = lay.decode_split(lay.encode_int8(buf))
+    back = lay.unpack(payload, scales=scales)
+    for k in tree:
+        amax = float(np.abs(np.asarray(tree[k])).max())
+        np.testing.assert_allclose(np.asarray(back[k]), np.asarray(tree[k]),
+                                   atol=amax / 127.0 + 1e-6)
+
+
+def test_auto_block_size_tracks_leaf_scale():
+    tiny = {"a": jax.ShapeDtypeStruct((17,), jnp.float32)}
+    big = {"a": jax.ShapeDtypeStruct((1 << 20,), jnp.float32)}
+    assert flatten.auto_block_size(tiny) == 128
+    assert flatten.auto_block_size(big) == 65536
+
+
+def test_pack_unpack_property_sweep():
+    def prop(rng, i):
+        j = int(rng.integers(1, 5))
+        nleaves = int(rng.integers(1, 6))
+        tree = [jnp.asarray(rng.normal(size=(j,) + tuple(
+            int(rng.integers(1, 40)) for _ in range(int(rng.integers(0, 3))))
+        ).astype(np.float32)) for _ in range(nleaves)]
+        bs = int(rng.choice([32, 64, 128]))
+        lay = flatten.FlatLayout.for_tree(tree, block_size=bs)
+        buf = lay.pack(tree)
+        back = lay.unpack(buf)
+        for a, b in zip(tree, back):
+            np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+        assert lay.total % bs == 0
+    sweep(prop, cases=10, seed=17)

@@ -156,3 +156,95 @@ def test_consensus_update_property_sweep():
         assert float(jnp.max(jnp.abs(t1 - t2))) < 1e-4
         assert float(jnp.max(jnp.abs(l1 - l2))) < 1e-4
     sweep(prop, cases=8, seed=13)
+
+
+@pytest.mark.parametrize("n,bs", [(1000, 256), (37, 64), (513, 128),
+                                  (65537, 65536)])
+def test_consensus_update_non_block_multiple(n, bs):
+    """Regression: odd N must zero-pad internally, not assert (and the
+    padded residual reductions must equal the unpadded oracle's)."""
+    rng = np.random.default_rng(7)
+    args = [jnp.asarray(rng.normal(size=n).astype(np.float32))
+            for _ in range(5)]
+    kw = dict(eta_sum=1.7, eta_node=0.9, step_size=0.05)
+    t1, l1, r1, s1 = ops.consensus_update(*args, block_size=bs, **kw)
+    t2, l2, r2, s2 = ref.consensus_update_ref(*args, **kw)
+    assert t1.shape == (n,) and l1.shape == (n,)
+    np.testing.assert_allclose(np.asarray(t1), np.asarray(t2), atol=1e-5)
+    np.testing.assert_allclose(np.asarray(l1), np.asarray(l2), atol=1e-5)
+    assert abs(float(r1 - r2)) / (float(r2) + 1e-9) < 1e-5
+    assert abs(float(s1 - s2)) / (float(s2) + 1e-9) < 1e-5
+
+
+# ---------------------------------------------------- fused round kernel ----
+def _round_case(rng, *, j, deg, nleaves, bs):
+    sizes = [int(rng.integers(1, 4 * bs)) for _ in range(nleaves)]
+    padded = [-(-s // bs) * bs for s in sizes]
+    total = sum(padded)
+    block_leaf, pieces = [], []
+    for li, (s, p) in enumerate(zip(sizes, padded)):
+        block_leaf += [li] * (p // bs)
+        seg = np.zeros((j, p), np.float32)
+        seg[:, :s] = rng.normal(size=(j, s))
+        pieces.append(seg)
+    theta = jnp.asarray(np.concatenate(pieces, axis=1))
+    lam = jnp.asarray(rng.normal(size=(j, total)).astype(np.float32))
+    barp = jnp.asarray(rng.normal(size=(j, total)).astype(np.float32))
+    wires = jnp.asarray(
+        rng.integers(-127, 128, size=(deg, j, total)).astype(np.int8))
+    scales = jnp.asarray(
+        rng.uniform(1e-3, 0.1, size=(deg, j, nleaves)).astype(np.float32))
+    e_sym = jnp.asarray(
+        rng.uniform(0.1, 3.0, size=(deg, j)).astype(np.float32))
+    eta_sum = e_sym.sum(axis=0)
+    alpha = 0.5 / (1.0 + 2.0 * eta_sum)
+    eta_node = eta_sum / deg
+    return (theta, lam, barp, wires, scales, e_sym, alpha, eta_sum,
+            eta_node, tuple(block_leaf))
+
+
+@pytest.mark.parametrize("whole_rows", [True, False])
+@pytest.mark.parametrize("j,deg,nleaves,bs", [
+    (2, 1, 3, 128), (4, 2, 5, 64), (3, 3, 1, 256),
+])
+def test_consensus_round_matches_ref(j, deg, nleaves, bs, whole_rows):
+    """Both tilings — TPU-blocked grid and interpreter whole-row — vs ref."""
+    rng = np.random.default_rng(11)
+    (theta, lam, barp, wires, scales, e_sym, alpha, eta_sum, eta_node,
+     block_leaf) = _round_case(rng, j=j, deg=deg, nleaves=nleaves, bs=bs)
+    out_k = ops.consensus_round(theta, lam, barp, wires, scales, e_sym,
+                                alpha, eta_sum, eta_node,
+                                block_leaf=block_leaf, block_size=bs,
+                                whole_rows=whole_rows)
+    out_r = ref.consensus_round_ref(theta, lam, barp, wires, scales, e_sym,
+                                    alpha, eta_sum, eta_node,
+                                    block_leaf=block_leaf, block_size=bs)
+    for a, b, name in zip(out_k, out_r,
+                          ("theta", "lam", "bar", "r_sq", "s_sq")):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                                   rtol=1e-5, atol=1e-5, err_msg=name)
+
+
+def test_consensus_round_float_wire_property_sweep():
+    """Uncompressed (f32 wire, unit scales) fused round == oracle."""
+    def prop(rng, i):
+        j = int(rng.integers(2, 5))
+        deg = int(rng.integers(1, min(j, 3) + 1))
+        bs = int(rng.choice([64, 128]))
+        nleaves = int(rng.integers(1, 4))
+        (theta, lam, barp, _, _, e_sym, alpha, eta_sum, eta_node,
+         block_leaf) = _round_case(rng, j=j, deg=deg, nleaves=nleaves, bs=bs)
+        total = theta.shape[1]
+        wires = jnp.asarray(
+            rng.normal(size=(deg, j, total)).astype(np.float32))
+        scales = jnp.ones((deg, j, nleaves), jnp.float32)
+        out_k = ops.consensus_round(theta, lam, barp, wires, scales, e_sym,
+                                    alpha, eta_sum, eta_node,
+                                    block_leaf=block_leaf, block_size=bs)
+        out_r = ref.consensus_round_ref(theta, lam, barp, wires, scales,
+                                        e_sym, alpha, eta_sum, eta_node,
+                                        block_leaf=block_leaf, block_size=bs)
+        for a, b in zip(out_k, out_r):
+            scale = 1.0 + float(jnp.max(jnp.abs(b)))
+            assert float(jnp.max(jnp.abs(a - b))) < 1e-4 * scale
+    sweep(prop, cases=6, seed=23)

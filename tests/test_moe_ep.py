@@ -21,9 +21,9 @@ from repro.configs.base import MoEConfig
 from repro.models import moe as moe_lib
 from repro.models.params import materialize
 from repro.distributed import sharding as shd
+from repro.launch.mesh import make_mesh
 
-mesh = jax.make_mesh((2, 4), ("data", "model"),
-                     axis_types=(jax.sharding.AxisType.Auto,)*2)
+mesh = make_mesh((2, 4), ("data", "model"))
 cfg = get_reduced_config("moonshot-v1-16b-a3b")
 # high capacity factor so the fixed-shape dispatch drops nothing
 cfg = dc.replace(cfg, moe=MoEConfig(num_experts=8, top_k=2, expert_d_ff=32,
