@@ -16,7 +16,7 @@ def main(argv=None) -> None:
                     help="paper-scale sweeps (20 seeds etc.)")
     ap.add_argument("--only", default="all",
                     choices=["all", "fig2", "fig3", "hopkins", "roofline",
-                             "consensus", "lm_ablation"])
+                             "consensus", "lm_ablation", "topology"])
     args = ap.parse_args(argv)
     seeds = 20 if args.full else 3
 
@@ -105,6 +105,21 @@ def main(argv=None) -> None:
             record("consensus_bench", "FAILED",
                    proc.stderr.strip().splitlines()[-1][:80]
                    if proc.stderr.strip() else "no stderr")
+
+    if args.only in ("all", "topology"):
+        from benchmarks import topology_dynamics
+        t0 = time.time()
+        rows = topology_dynamics.run(smoke=not args.full,
+                                     seeds=seeds if args.full else 1)
+        by = {(r["topology"], r["scheduler"]): r for r in rows}
+        for topo in sorted({r["topology"] for r in rows}):
+            b = by.get((topo, "budget"))
+            if b:
+                record(f"topology_{topo}_budget_active_final",
+                       b["active_final"],
+                       f"iters={b['iters_median']:.0f} (vs static "
+                       f"{by[(topo, 'static')]['iters_median']:.0f})")
+        record("topology_wall_s", round(time.time() - t0, 1))
 
     if args.only in ("all", "lm_ablation"):
         import os

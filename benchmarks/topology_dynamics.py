@@ -1,0 +1,128 @@
+"""Topology-dynamics sweep: scheduler x topology on the synthetic problem.
+
+For every scheduler (static, budget, random, round_robin) x topology
+(complete, ring, cluster, expander) at J=12, runs the dense consensus-ADMM
+engine (NAP penalties) on the synthetic least-squares problem and records
+
+  * iterations to the paper's §5 relative-objective criterion,
+  * final max parameter error vs the centralized solution,
+  * mean active-edge fraction over the run and the final fraction after
+    100 post-convergence epochs (the budget scheduler's §4 shedding).
+
+Writes ``BENCH_topology.json`` at the repo root (the committed baseline,
+like BENCH_consensus.json) plus the usual results CSV. ``--smoke`` runs a
+reduced grid for CI.
+"""
+from __future__ import annotations
+
+import argparse
+
+import numpy as np
+
+TOPOLOGIES = ("complete", "ring", "cluster", "expander")
+SCHEDULERS = ("static", "budget", "random", "round_robin")
+
+
+def _lsq_problem(j, d=4, n=16, seed=0):
+    import jax.numpy as jnp
+    rng = np.random.default_rng(seed)
+    A = rng.normal(size=(j, n, d)).astype(np.float32)
+    w_true = rng.normal(size=d).astype(np.float32)
+    b = A @ w_true + 0.01 * rng.normal(size=(j, n)).astype(np.float32)
+    w_star = np.linalg.lstsq(A.reshape(-1, d), b.reshape(-1), rcond=None)[0]
+    theta0 = {"w": jnp.asarray(rng.normal(size=(j, d)).astype(np.float32))}
+    return (jnp.asarray(A), jnp.asarray(b)), theta0, w_star
+
+
+def run(*, smoke: bool = False, j: int = 12, seeds: int = 3,
+        max_iters: int = 400, post_epochs: int = 100) -> list[dict]:
+    import jax.numpy as jnp
+    from repro.core import ConsensusADMM, PenaltyConfig, build_graph
+    from repro.topology import TopologyConfig
+
+    from benchmarks.common import write_csv, write_json
+
+    def _lsq_obj(data, th):
+        Ai, bi = data
+        return jnp.sum((Ai @ th["w"] - bi) ** 2)
+
+    topologies = TOPOLOGIES[:2] if smoke else TOPOLOGIES
+    schedulers = ("static", "budget") if smoke else SCHEDULERS
+    if smoke:
+        seeds, max_iters, post_epochs = 1, 150, 20
+
+    rows = []
+    for topo in topologies:
+        g = build_graph(topo, j)
+        adj_n = max(int(g.adj.sum()), 1)
+        for sched in schedulers:
+            tcfg = None if sched == "static" else TopologyConfig(
+                scheduler=sched)
+            iters, errs, mean_active, final_active = [], [], [], []
+            for s in range(seeds):
+                data, theta0, w_star = _lsq_problem(j, seed=3 + s)
+                eng = ConsensusADMM(
+                    objective=_lsq_obj,
+                    penalty_cfg=PenaltyConfig(scheme="nap", eta0=1.0),
+                    graph=g, inner_steps=30, inner_lr=1.0,
+                    topology_cfg=tcfg)
+                st = eng.init(theta0)
+                st, hist = eng.run(st, data, max_iters=max_iters,
+                                   rel_tol=1e-3)
+                actives = []
+                for _ in range(post_epochs):
+                    st, m = eng.step(st, data)
+                    if "active_edges" in m:
+                        actives.append(float(m["active_edges"]))
+                iters.append(hist["iterations"])
+                errs.append(float(np.abs(
+                    np.asarray(st.theta["w"]) - w_star).max()))
+                if st.topo is not None:
+                    mean_active.append(float(np.mean(actives)))
+                    final_active.append(
+                        float(np.asarray(st.topo.mask).sum() / adj_n))
+                else:
+                    mean_active.append(1.0)
+                    final_active.append(1.0)
+            rows.append({
+                "nodes": j, "topology": topo, "scheduler": sched,
+                "iters_median": float(np.median(iters)),
+                "err_median": round(float(np.median(errs)), 5),
+                "active_mean": round(float(np.median(mean_active)), 4),
+                "active_final": round(float(np.median(final_active)), 4),
+                "seeds": seeds,
+            })
+            print(f"topo_dyn J={j} {topo:9s} {sched:11s} "
+                  f"iters={np.median(iters):5.0f} "
+                  f"err={np.median(errs):.4f} "
+                  f"active_final={np.median(final_active):.2f}", flush=True)
+    write_csv("topology_dynamics.csv", rows)
+    # the repo-root file is the COMMITTED baseline — smoke runs (CI) must
+    # not clobber it with the reduced grid; they write to results/ instead
+    write_json("BENCH_topology.json",
+               {"j": j, "rel_tol": 1e-3, "smoke": smoke, "rows": rows},
+               repo_root=not smoke)
+    return rows
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true",
+                    help="reduced grid for CI")
+    ap.add_argument("--seeds", type=int, default=3)
+    args = ap.parse_args(argv)
+    rows = run(smoke=args.smoke, seeds=args.seeds)
+    # CI guard: the budget scheduler must not pay iterations for its wire
+    # savings (acceptance: <= fixed-topology NAP) and must shed edges
+    by = {(r["topology"], r["scheduler"]): r for r in rows}
+    for topo in {r["topology"] for r in rows}:
+        fixed, budget = by[(topo, "static")], by[(topo, "budget")]
+        assert budget["iters_median"] <= fixed["iters_median"], (topo, by)
+        if topo != "ring":              # ring is all-backbone: nothing to shed
+            assert budget["active_final"] < 1.0, (topo, budget)
+    print("topology_dynamics: OK")
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

@@ -1,0 +1,73 @@
+"""Dynamic topology: edge gating, shedding, and surviving a node loss.
+
+Three acts on a distributed least-squares problem (12 nodes, expander):
+
+  1. run NAP with the §4 budget scheduler to convergence — same iteration
+     count as fixed topology;
+  2. keep iterating past convergence — exhausted edges detach one by one
+     (watch the active-edge fraction fall) while the solution stays put;
+  3. kill a node mid-run — the topology runtime ghosts it, rewires the
+     survivors through the spare offsets, and the run just keeps going.
+
+Run:  PYTHONPATH=src python examples/dynamic_topology.py
+"""
+import numpy as np
+import jax.numpy as jnp
+
+from repro.core import ConsensusADMM, PenaltyConfig, build_graph
+from repro.topology import TopologyConfig
+
+
+def main():
+    J, d, n = 12, 5, 20
+    rng = np.random.default_rng(0)
+    A = rng.normal(size=(J, n, d)).astype(np.float32)
+    w_true = rng.normal(size=d).astype(np.float32)
+    b = A @ w_true + 0.05 * rng.normal(size=(J, n)).astype(np.float32)
+    w_star = np.linalg.lstsq(A.reshape(-1, d), b.reshape(-1), rcond=None)[0]
+
+    def objective(data, theta):
+        Ai, bi = data
+        return jnp.sum((Ai @ theta["w"] - bi) ** 2)
+
+    data = (jnp.asarray(A), jnp.asarray(b))
+    theta0 = {"w": jnp.asarray(rng.normal(size=(J, d)).astype(np.float32))}
+    graph = build_graph("expander", J)
+
+    engine = ConsensusADMM(
+        objective=objective,
+        penalty_cfg=PenaltyConfig(scheme="nap", eta0=1.0),
+        graph=graph, inner_steps=30, inner_lr=1.0,
+        topology_cfg=TopologyConfig(scheduler="budget", churn=True))
+
+    # act 1: converge under the paper's §5 criterion
+    state = engine.init(theta0)
+    state, hist = engine.run(state, data, max_iters=400, rel_tol=1e-3)
+    err = float(np.abs(np.asarray(state.theta["w"]) - w_star).max())
+    print(f"converged in {hist['iterations']} iterations, "
+          f"max|w - w*| = {err:.4f}")
+
+    # act 2: §4 shedding — exhausted edges detach, the iterate holds
+    adj_n = int(graph.adj.sum())
+    for epoch in range(0, 100, 20):
+        for _ in range(20):
+            state, m = engine.step(state, data)
+        err = float(np.abs(np.asarray(state.theta["w"]) - w_star).max())
+        print(f"  +{epoch + 20:3d} epochs: active edges "
+              f"{float(m['active_edges']):.2f}, max|w - w*| = {err:.4f}")
+
+    # act 3: lose a node — ghosted, rewired, no restart
+    victim = 7
+    state = engine.apply_churn(state, victim)
+    for _ in range(30):
+        state, m = engine.step(state, data)
+    alive = np.asarray(state.topo.node_alive)
+    w = np.asarray(state.theta["w"])[alive]
+    print(f"dropped node {victim}: {int(alive.sum())}/{J} alive, "
+          f"survivor consensus spread "
+          f"{float(np.abs(w - w.mean(axis=0)).max()):.5f}, "
+          f"active edges {float(m['active_edges']):.2f}")
+
+
+if __name__ == "__main__":
+    main()

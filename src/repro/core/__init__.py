@@ -1,11 +1,12 @@
 """Core: the paper's consensus-ADMM engine with adaptive penalty schedules."""
 from repro.core.admm import ConsensusADMM, ConsensusState, consensus_error
 from repro.core.graph import (Graph, TOPOLOGIES, build_graph, chain_graph,
-                              cluster_graph, complete_graph, drop_node,
+                              cluster_graph, complete_graph,
+                              connected_components, drop_node,
                               expander_graph, ring_graph, star_graph,
                               torus_graph)
 from repro.core.penalty import (SCHEMES, PenaltyConfig, PenaltyState,
-                                compute_tau, effective_eta,
+                                budget_exhausted, compute_tau, effective_eta,
                                 init_penalty_state, update_penalty)
 from repro.core.residuals import (Residuals, local_residuals, neighbor_mean,
                                   node_eta)
@@ -13,9 +14,9 @@ from repro.core.residuals import (Residuals, local_residuals, neighbor_mean,
 __all__ = [
     "ConsensusADMM", "ConsensusState", "consensus_error",
     "Graph", "TOPOLOGIES", "build_graph", "chain_graph", "cluster_graph",
-    "complete_graph", "drop_node", "expander_graph", "ring_graph",
-    "star_graph", "torus_graph",
-    "SCHEMES", "PenaltyConfig", "PenaltyState", "compute_tau",
-    "effective_eta", "init_penalty_state", "update_penalty",
+    "complete_graph", "connected_components", "drop_node", "expander_graph",
+    "ring_graph", "star_graph", "torus_graph",
+    "SCHEMES", "PenaltyConfig", "PenaltyState", "budget_exhausted",
+    "compute_tau", "effective_eta", "init_penalty_state", "update_penalty",
     "Residuals", "local_residuals", "neighbor_mean", "node_eta",
 ]

@@ -26,11 +26,12 @@ node axis mapped onto the device mesh.
 from __future__ import annotations
 
 import dataclasses
-from functools import partial
+from functools import partial, cached_property
 from typing import Any, Callable, NamedTuple
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from repro.core import residuals as res_lib
 from repro.core.graph import Graph
@@ -51,6 +52,7 @@ class ConsensusState(NamedTuple):
     theta_bar: PyTree      # leaves [J, ...] — previous neighbor average
     penalty: PenaltyState
     t: jax.Array           # [] int32
+    topo: Any = None       # TopologyState when a topology_cfg is configured
 
 
 @dataclasses.dataclass(frozen=True, eq=False)  # identity hash: jit-cache key
@@ -65,6 +67,18 @@ class ConsensusADMM:
         closed-form ``local_solver`` is supplied).
       probe_midpoint: evaluate kappa at rho_ij=(theta_i+theta_j)/2 (the
         paper's locality remark in §3.2) instead of at theta_j directly.
+      degree_normalize: scale each edge's applied penalty by
+        (J-1)/sqrt(deg_i deg_j), so a node's total consensus pull matches
+        the complete graph's regardless of topology. Complete graphs are
+        unchanged (scale = 1); low-connectivity graphs (expander, ring)
+        converge instead of crawling. Symmetric, so the sum_i lam_i = 0
+        dual invariant survives. Set False for the paper's literal,
+        unnormalized weighting. (The paper-figure reproductions —
+        fig2/fig3/Hopkins — run on ``repro.ppca.DPPCA``, which has its own
+        step and is NOT affected by this default.)
+      topology_cfg: optional ``repro.topology.TopologyConfig`` — runs the
+        dynamic-topology schedulers on the dense path: the traced edge
+        mask replaces the static adjacency everywhere in the step.
     """
 
     objective: ObjectiveFn
@@ -74,6 +88,37 @@ class ConsensusADMM:
     inner_lr: float = 0.05
     probe_midpoint: bool = False
     local_solver: LocalSolver | None = None
+    degree_normalize: bool = True
+    topology_cfg: Any = None
+
+    def __post_init__(self):
+        if self.topology_cfg is not None:
+            self.topology_cfg.validate_penalty(self.penalty_cfg)
+
+    @cached_property
+    def _topo_rt(self):
+        """Lazy TopologyRuntime (None when no topology_cfg configured).
+
+        The dense path has no permute schedule, so churn repair may draw
+        from ANY node pair (the engine is constrained to its compiled
+        circulant offset superset instead).
+        """
+        if self.topology_cfg is None:
+            return None
+        from repro.topology import TopologyRuntime
+        j = self.graph.num_nodes
+        return TopologyRuntime(self.graph, self.topology_cfg,
+                               edge_universe=~np.eye(j, dtype=bool))
+
+    @cached_property
+    def _edge_scale(self) -> jax.Array:
+        """[J, J] symmetric degree-compensation factors (ones when off)."""
+        j = self.graph.num_nodes
+        if not self.degree_normalize or j <= 1:
+            return jnp.ones((j, j), jnp.float32)
+        deg = np.maximum(self.graph.degrees.astype(np.float64), 1.0)
+        scale = (j - 1) / np.sqrt(deg[:, None] * deg[None, :])
+        return jnp.asarray(scale, jnp.float32)
 
     # -- initialization --------------------------------------------------------
     def init(self, theta0: PyTree) -> ConsensusState:
@@ -88,7 +133,9 @@ class ConsensusADMM:
         return ConsensusState(
             theta=theta0, lam=zeros, theta_bar=bar,
             penalty=init_penalty_state(self.penalty_cfg, j),
-            t=jnp.zeros((), jnp.int32))
+            t=jnp.zeros((), jnp.int32),
+            topo=(None if self._topo_rt is None
+                  else self._topo_rt.init_state()))
 
     # -- inner solvers ----------------------------------------------------------
     def _solve_gradient(self, data, theta, lam, eta, adj):
@@ -146,28 +193,47 @@ class ConsensusADMM:
 
         return jax.vmap(one_node)(data, theta, lam, pull, wsum)
 
+    # -- churn -----------------------------------------------------------------
+    def apply_churn(self, state: ConsensusState, victim: int
+                    ) -> ConsensusState:
+        """Host-side layout-preserving node drop (mirrors the trainer's).
+
+        Ghosts the victim in the topology state — all shapes survive, the
+        jitted step keeps its cache, and the runtime rewires survivors and
+        asserts connectivity. Requires ``topology_cfg``.
+        """
+        if self._topo_rt is None:
+            raise ValueError("node churn needs a topology_cfg")
+        return state._replace(topo=self._topo_rt.drop_node(state.topo,
+                                                           victim))
+
     # -- one outer iteration ----------------------------------------------------
     @partial(jax.jit, static_argnums=0)
     def step(self, state: ConsensusState, data: PyTree) -> tuple[
             ConsensusState, dict]:
         """data: pytree with leading node axis [J, ...] (local observations)."""
         g = self.graph
-        adj = jnp.asarray(g.adj)
+        adj_static = jnp.asarray(g.adj)
+        # dynamic topology: the traced mask IS the adjacency this round
+        adj = state.topo.mask if state.topo is not None else adj_static
         eta = state.penalty.eta
+        # degree compensation applies where eta is CONSUMED — the penalty
+        # schedule itself keeps adapting the raw eta around eta0
+        eta_eff = eta * self._edge_scale
 
         # (1) local argmin
         if self.local_solver is not None:
-            theta_new = self.local_solver(data, state.theta, state.lam, eta,
-                                          adj)
+            theta_new = self.local_solver(data, state.theta, state.lam,
+                                          eta_eff, adj)
         else:
             theta_new = self._solve_gradient(data, state.theta, state.lam,
-                                             eta, adj)
+                                             eta_eff, adj)
 
         # (2)+(3) neighbor exchange and dual update:
         #   lam_i += 1/2 sum_j eta_ij (theta_i - theta_j)
         # using the SYMMETRIZED penalty — directed eta would break the
         # sum_i lam_i = 0 invariant and bias the fixed point (DESIGN.md §7).
-        w = 0.5 * (eta + eta.T) * adj.astype(eta.dtype)
+        w = 0.5 * (eta_eff + eta_eff.T) * adj.astype(eta.dtype)
         wsum = w.sum(axis=1)
 
         def dual_leaf(lam_leaf, th_leaf):
@@ -178,8 +244,8 @@ class ConsensusADMM:
 
         lam_new = jax.tree_util.tree_map(dual_leaf, state.lam, theta_new)
 
-        # (eq. 5) local residuals
-        eta_node = res_lib.node_eta(eta, adj)
+        # (eq. 5) local residuals — with the APPLIED (scaled) penalties
+        eta_node = res_lib.node_eta(eta_eff, adj)
         rr = res_lib.local_residuals(theta_new, state.theta_bar, adj, eta_node)
 
         # objective probes for AP/NAP-family schedules
@@ -201,13 +267,42 @@ class ConsensusADMM:
             f_self = jax.vmap(self.objective)(data, theta_new)
             f_nbr = None
 
+        if state.topo is not None:
+            # gated GRAPH edges keep adapting (the eq. 10 top-up must see
+            # them to revive); ghost rows/cols never do
+            alive = state.topo.node_alive
+            adj_pen = (adj_static & alive[:, None] & alive[None, :]) | adj
+        else:
+            adj_pen = adj_static
         penalty_new = update_penalty(
-            pcfg, state.penalty, adj=adj, f_self=f_self, f_nbr=f_nbr,
+            pcfg, state.penalty, adj=adj_pen, f_self=f_self, f_nbr=f_nbr,
             r_norm=rr.r_norm, s_norm=rr.s_norm)
 
+        topo_new = state.topo
+        if state.topo is not None:
+            topo_new = self._topo_rt.update(state.topo, penalty=penalty_new,
+                                            r_norm=rr.r_norm)
+            # zero-kick gating: absorb each newly-gated edge's final
+            # consensus force into the dual (one extra dual-ascent step
+            # restricted to those edges), so removing the edge leaves every
+            # node's augmented stationarity EXACTLY unchanged at the
+            # current iterate — gating never perturbs a converged region.
+            # Antisymmetric per edge pair, so sum_i lam_i = 0 survives.
+            newly_off = (state.topo.mask & ~topo_new.mask).astype(w.dtype)
+            w_off = w * newly_off
+            woff_sum = w_off.sum(axis=1)
+
+            def absorb_leaf(lam_leaf, th_leaf):
+                flat = th_leaf.reshape(th_leaf.shape[0], -1)
+                diff = woff_sum[:, None] * flat - w_off @ flat
+                return lam_leaf + 0.5 * diff.reshape(th_leaf.shape).astype(
+                    lam_leaf.dtype)
+
+            lam_new = jax.tree_util.tree_map(absorb_leaf, lam_new, theta_new)
         new_state = ConsensusState(theta=theta_new, lam=lam_new,
                                    theta_bar=rr.theta_bar,
-                                   penalty=penalty_new, t=state.t + 1)
+                                   penalty=penalty_new, t=state.t + 1,
+                                   topo=topo_new)
         metrics = {
             "objective": f_self.sum(),
             "r_norm": rr.r_norm,
@@ -216,6 +311,10 @@ class ConsensusADMM:
             "eta_min": jnp.where(adj, penalty_new.eta, jnp.inf).min(),
             "eta_max": jnp.where(adj, penalty_new.eta, -jnp.inf).max(),
         }
+        if state.topo is not None:
+            from repro.topology import active_edge_fraction
+            metrics["active_edges"] = active_edge_fraction(state.topo,
+                                                           adj_static)
         return new_state, metrics
 
     # -- convergence-driven run -------------------------------------------------

@@ -234,20 +234,51 @@ def build_graph(name: str, j: int, **kw) -> Graph:
     raise ValueError(f"unknown topology {name!r}; options: {TOPOLOGIES}")
 
 
+def connected_components(adj: np.ndarray) -> list[list[int]]:
+    """Connected components of a boolean adjacency (sorted node lists)."""
+    adj = np.asarray(adj, dtype=bool)
+    n = adj.shape[0]
+    seen = np.zeros(n, dtype=bool)
+    comps: list[list[int]] = []
+    for s in range(n):
+        if seen[s]:
+            continue
+        comp = [s]
+        seen[s] = True
+        frontier = [s]
+        while frontier:
+            i = frontier.pop()
+            for j in np.nonzero(adj[i])[0]:
+                if not seen[j]:
+                    seen[j] = True
+                    comp.append(int(j))
+                    frontier.append(int(j))
+        comps.append(sorted(comp))
+    return comps
+
+
 def drop_node(g: Graph, node: int) -> Graph:
     """Elastic-rescale helper: remove a failed node, keep the graph connected.
 
-    If removal disconnects the graph, bridge the components along the former
-    neighbors of the dropped node (cheapest repair that preserves locality).
+    If removal disconnects the graph, repair with a spanning chain over the
+    resulting COMPONENTS (one bridge edge per adjacent component pair),
+    choosing each bridge endpoint among the dropped node's former neighbors
+    when possible — the cheapest repair that preserves locality. Chaining
+    components (rather than chaining the former neighbors pairwise) both
+    adds the minimal number of edges and cannot leave a star-like cut
+    region disconnected. Connectivity is asserted before returning.
     """
     keep = [i for i in range(g.num_nodes) if i != node]
     adj = g.adj[np.ix_(keep, keep)].copy()
-    sub = Graph.__new__(Graph)  # bypass validation while repairing
-    object.__setattr__(sub, "num_nodes", len(keep))
-    object.__setattr__(sub, "adj", adj)
-    object.__setattr__(sub, "name", g.name)
-    if len(keep) > 1 and not sub.is_connected():
-        old_nbrs = [keep.index(i) for i in g.neighbors(node) if i != node]
-        for a, b in zip(old_nbrs[:-1], old_nbrs[1:]):
-            adj[a, b] = adj[b, a] = True
+    if len(keep) > 1:
+        comps = connected_components(adj)
+        if len(comps) > 1:
+            old_nbrs = {keep.index(i) for i in g.neighbors(node)
+                        if i != node}
+            # one representative per component, preferring former neighbors
+            reps = [min(set(c) & old_nbrs) if set(c) & old_nbrs else c[0]
+                    for c in comps]
+            for a, b in zip(reps[:-1], reps[1:]):
+                adj[a, b] = adj[b, a] = True
+    # Graph.__post_init__ asserts connectivity of the repaired result
     return Graph(len(keep), adj, g.name)

@@ -256,3 +256,14 @@ def effective_eta(cfg: PenaltyConfig, state: PenaltyState,
                   adj: jax.Array) -> jax.Array:
     """eta actually applied to edge (i, j) this iteration, zero on non-edges."""
     return jnp.where(adj.astype(bool), state.eta, 0.0)
+
+
+def budget_exhausted(state: PenaltyState) -> jax.Array:
+    """[J, J] bool — directed edges whose eq. (9) budget is spent.
+
+    The §4 observation ("budget gating effectively leads to an adaptive,
+    dynamic network topology") made queryable: ``repro.topology``'s budget
+    scheduler deactivates an edge when BOTH directions are exhausted; a
+    top-up (eq. 10) raises T_ij above cum_tau and revives it.
+    """
+    return state.cum_tau >= state.budget

@@ -12,6 +12,12 @@ Two layouts are supported:
   * dense: parameters stacked on a leading node axis ``[J, ...]`` (single-host
     reproduction path — PPCA, synthetic convex problems);
   * pytree: each node holds a pytree; norms reduce over all leaves.
+
+``adj`` may be a TRACED dynamic-topology mask (``repro.topology``) instead of
+the static adjacency — everything here is mask-shape-agnostic. A row with no
+active edges (a gated-out or ghost node) gets theta_bar = 0 (the degree
+clamps to 1), so its "residual" equals its parameter norm; callers that
+report or gate on residuals should mask ghost rows out (the trainer does).
 """
 from __future__ import annotations
 

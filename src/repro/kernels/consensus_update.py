@@ -29,6 +29,13 @@ Per block of the flat parameter vector (``consensus_round``):
     r_sq     += |theta_new - bar|^2                      (per-block partials)
     s_sq     += eta_node^2 |bar - bar_prev|^2
 
+Dynamic topology (``bar_w``/``inv_deg`` supplied — see ``repro.topology``):
+the traced per-(offset, node) edge gate ``bar_w`` weights the neighbor-mean
+accumulation and the per-node ``inv_deg`` (1 / active degree) replaces the
+static 1/deg, so a gated edge contributes exactly zero math. The ungated
+path is byte-for-byte the PR 1 kernel — ``scheduler="static"`` stays
+bit-identical by construction.
+
 SMEM footprint note: the block->leaf table costs 4 bytes per block — pick
 ``block_size`` >= 64k at LM scale so a multi-billion-parameter vector keeps
 the table in the tens of KB.
@@ -192,25 +199,111 @@ def _row_kernel(deg, block_size, block_leaf_ref, node_ref, esym_ref,
     ssq_out[0, 0] = (eta_node * eta_node) * blocksum(dbar * dbar)
 
 
+def _round_kernel_masked(deg, block_leaf_ref, node_ref, esym_ref, barw_ref,
+                         scale_ref, theta_ref, lam_ref, barp_ref, wires_ref,
+                         theta_out, lam_out, bar_out, rsq_out, ssq_out):
+    """Edge-gated variant of ``_round_kernel`` (see module docstring)."""
+    b = pl.program_id(1)
+    li = block_leaf_ref[b]
+    alpha = node_ref[0, 0]
+    eta_sum = node_ref[1, 0]
+    eta_node = node_ref[2, 0]
+    inv_deg = node_ref[3, 0]
+
+    theta = theta_ref[0, :].astype(jnp.float32)
+    lam = lam_ref[0, :].astype(jnp.float32)
+    barp = barp_ref[0, :].astype(jnp.float32)
+
+    nbr_w = jnp.zeros_like(theta)
+    nbr_p = jnp.zeros_like(theta)
+    for d in range(deg):                      # static unroll over offsets
+        x = wires_ref[d, 0, :].astype(jnp.float32) * scale_ref[d, 0, li]
+        nbr_w = nbr_w + esym_ref[d, 0] * x
+        nbr_p = nbr_p + barw_ref[d, 0] * x
+    bar = nbr_p * inv_deg
+    nbr = nbr_w / jnp.maximum(eta_sum, 1e-12)
+
+    theta_new = theta - alpha * (2.0 * lam + eta_sum * (theta - nbr))
+    lam_new = lam + 0.5 * eta_sum * (theta_new - nbr)
+    theta_out[0, :] = theta_new.astype(theta_out.dtype)
+    lam_out[0, :] = lam_new.astype(lam_out.dtype)
+    bar_out[0, :] = bar.astype(bar_out.dtype)
+    rsq_out[0, 0] = jnp.sum((theta_new - bar) ** 2)
+    dbar = bar - barp
+    ssq_out[0, 0] = (eta_node * eta_node) * jnp.sum(dbar * dbar)
+
+
+def _row_kernel_masked(deg, block_size, block_leaf_ref, node_ref, esym_ref,
+                       barw_ref, scale_ref, theta_ref, lam_ref, barp_ref,
+                       wires_ref, theta_out, lam_out, bar_out, rsq_out,
+                       ssq_out):
+    """Edge-gated variant of ``_row_kernel`` (whole-row interpret tiling)."""
+    alpha = node_ref[0, 0]
+    eta_sum = node_ref[1, 0]
+    eta_node = node_ref[2, 0]
+    inv_deg = node_ref[3, 0]
+    theta = theta_ref[0, :].astype(jnp.float32)
+    lam = lam_ref[0, :].astype(jnp.float32)
+    barp = barp_ref[0, :].astype(jnp.float32)
+
+    bl = block_leaf_ref[...]
+    nbr_w = jnp.zeros_like(theta)
+    nbr_p = jnp.zeros_like(theta)
+    for d in range(deg):
+        scale_vec = jnp.repeat(scale_ref[d, 0, :][bl], block_size,
+                               total_repeat_length=theta.shape[0])
+        x = wires_ref[d, 0, :].astype(jnp.float32) * scale_vec
+        nbr_w = nbr_w + esym_ref[d, 0] * x
+        nbr_p = nbr_p + barw_ref[d, 0] * x
+    bar = nbr_p * inv_deg
+    nbr = nbr_w / jnp.maximum(eta_sum, 1e-12)
+
+    theta_new = theta - alpha * (2.0 * lam + eta_sum * (theta - nbr))
+    lam_new = lam + 0.5 * eta_sum * (theta_new - nbr)
+    theta_out[0, :] = theta_new.astype(theta_out.dtype)
+    lam_out[0, :] = lam_new.astype(lam_out.dtype)
+    bar_out[0, :] = bar.astype(bar_out.dtype)
+
+    def blocksum(v):                    # same order as the blocked kernel
+        return v.reshape(-1, block_size).sum(axis=-1).sum()
+
+    rsq_out[0, 0] = blocksum((theta_new - bar) ** 2)
+    dbar = bar - barp
+    ssq_out[0, 0] = (eta_node * eta_node) * blocksum(dbar * dbar)
+
+
 def _row_round(theta, lam, bar_prev, wires, scales, e_sym, node_scalars,
-               block_leaf_arr, *, block_size, interpret):
+               block_leaf_arr, *, block_size, interpret, bar_w=None):
     j, total = theta.shape
     deg = wires.shape[0]
+    masked = bar_w is not None
     vec = pl.BlockSpec((1, total), lambda i: (i, 0))
+    nscal = 4 if masked else 3
+    in_specs = [
+        pl.BlockSpec(memory_space=pltpu.SMEM),       # block -> leaf
+        pl.BlockSpec((nscal, 1), lambda i: (0, i),
+                     memory_space=pltpu.SMEM),
+        pl.BlockSpec((deg, 1), lambda i: (0, i),
+                     memory_space=pltpu.SMEM),
+    ]
+    args = [block_leaf_arr, node_scalars, e_sym.astype(jnp.float32)]
+    if masked:
+        in_specs.append(pl.BlockSpec((deg, 1), lambda i: (0, i),
+                                     memory_space=pltpu.SMEM))
+        args.append(bar_w.astype(jnp.float32))
+    in_specs += [
+        pl.BlockSpec((deg, 1, scales.shape[-1]), lambda i: (0, i, 0),
+                     memory_space=pltpu.SMEM),
+        vec, vec, vec,
+        pl.BlockSpec((deg, 1, total), lambda i: (0, i, 0)),
+    ]
+    args += [scales.astype(jnp.float32), theta, lam, bar_prev, wires]
+    alias_base = len(in_specs) - 4                    # position of theta
+    kernel = (_row_kernel_masked if masked else _row_kernel)
     return pl.pallas_call(
-        functools.partial(_row_kernel, deg, block_size),
+        functools.partial(kernel, deg, block_size),
         grid=(j,),
-        in_specs=[
-            pl.BlockSpec(memory_space=pltpu.SMEM),       # block -> leaf
-            pl.BlockSpec((3, 1), lambda i: (0, i),
-                         memory_space=pltpu.SMEM),
-            pl.BlockSpec((deg, 1), lambda i: (0, i),
-                         memory_space=pltpu.SMEM),
-            pl.BlockSpec((deg, 1, scales.shape[-1]), lambda i: (0, i, 0),
-                         memory_space=pltpu.SMEM),
-            vec, vec, vec,
-            pl.BlockSpec((deg, 1, total), lambda i: (0, i, 0)),
-        ],
+        in_specs=in_specs,
         out_specs=[vec, vec, vec,
                    pl.BlockSpec((1, 1), lambda i: (i, 0)),
                    pl.BlockSpec((1, 1), lambda i: (i, 0))],
@@ -221,10 +314,10 @@ def _row_round(theta, lam, bar_prev, wires, scales, e_sym, node_scalars,
             jax.ShapeDtypeStruct((j, 1), jnp.float32),
             jax.ShapeDtypeStruct((j, 1), jnp.float32),
         ],
-        input_output_aliases={4: 0, 5: 1, 6: 2},
+        input_output_aliases={alias_base: 0, alias_base + 1: 1,
+                              alias_base + 2: 2},
         interpret=interpret,
-    )(block_leaf_arr, node_scalars, e_sym.astype(jnp.float32),
-      scales.astype(jnp.float32), theta, lam, bar_prev, wires)
+    )(*args)
 
 
 @functools.partial(jax.jit, static_argnames=("block_leaf", "block_size",
@@ -233,7 +326,8 @@ def consensus_round(theta, lam, bar_prev, wires, scales, e_sym,
                     alpha, eta_sum, eta_node, *,
                     block_leaf: tuple[int, ...], block_size: int,
                     interpret: bool = True,
-                    whole_rows: bool | None = None):
+                    whole_rows: bool | None = None,
+                    bar_w=None, inv_deg=None):
     """Whole-round fused kernel over the flat buffer.
 
     Args:
@@ -242,10 +336,16 @@ def consensus_round(theta, lam, bar_prev, wires, scales, e_sym,
         float dtype; row d holds theta_{(i+off_d) % J} at node i.
       scales: [deg, J, L] f32 per-leaf dequant scales (ones when the wire is
         uncompressed).
-      e_sym: [deg, J] f32 symmetrized per-edge penalties eta_sym_ij.
+      e_sym: [deg, J] f32 symmetrized per-edge penalties eta_sym_ij
+        (edge-gated upstream for dynamic topologies: zero on masked edges).
       alpha, eta_sum, eta_node: [J] f32 per-node scalars.
       block_leaf: static tuple, owning leaf id per block (FlatLayout table).
       block_size: elements per block; must divide total.
+      bar_w: optional [deg, J] f32 traced edge gates (1 = active) weighting
+        the neighbor-mean accumulation — the dynamic-topology mask.
+      inv_deg: optional [J] f32, 1 / active degree (0 for isolated/ghost
+        nodes). Must be supplied together with ``bar_w``; both None selects
+        the ungated PR 1 kernel (byte-identical math).
 
     Returns (theta_new [J, total], lam_new [J, total], bar [J, total] f32,
              r_sq [J], s_sq [J]).
@@ -263,17 +363,22 @@ def consensus_round(theta, lam, bar_prev, wires, scales, e_sym,
     assert total % block_size == 0, (total, block_size)
     nblocks = total // block_size
     assert len(block_leaf) == nblocks, (len(block_leaf), nblocks)
+    masked = bar_w is not None
+    assert masked == (inv_deg is not None), "bar_w and inv_deg travel together"
 
-    node_scalars = jnp.stack([
-        jnp.asarray(alpha, jnp.float32),
-        jnp.asarray(eta_sum, jnp.float32),
-        jnp.asarray(eta_node, jnp.float32)])              # [3, J]
+    rows = [jnp.asarray(alpha, jnp.float32),
+            jnp.asarray(eta_sum, jnp.float32),
+            jnp.asarray(eta_node, jnp.float32)]
+    if masked:
+        rows.append(jnp.asarray(inv_deg, jnp.float32))
+    node_scalars = jnp.stack(rows)                    # [3|4, J]
     block_leaf_arr = jnp.asarray(block_leaf, jnp.int32)
 
     if interpret if whole_rows is None else whole_rows:
         tn, ln, bar, rsq, ssq = _row_round(
             theta, lam, bar_prev, wires, scales, e_sym, node_scalars,
-            block_leaf_arr, block_size=block_size, interpret=interpret)
+            block_leaf_arr, block_size=block_size, interpret=interpret,
+            bar_w=bar_w)
         return tn, ln, bar, rsq[:, 0], ssq[:, 0]
 
     smem = pl.BlockSpec(memory_space=pltpu.SMEM)
@@ -281,20 +386,33 @@ def consensus_round(theta, lam, bar_prev, wires, scales, e_sym,
     wire_spec = pl.BlockSpec((deg, 1, block_size), lambda i, b: (0, i, b))
     part = pl.BlockSpec((1, 1), lambda i, b: (i, b))
 
+    nscal = node_scalars.shape[0]
+    in_specs = [
+        smem,                        # block -> leaf table
+        pl.BlockSpec((nscal, 1), lambda i, b: (0, i),
+                     memory_space=pltpu.SMEM),        # per-node scalars
+        pl.BlockSpec((deg, 1), lambda i, b: (0, i),
+                     memory_space=pltpu.SMEM),        # e_sym
+    ]
+    args = [block_leaf_arr, node_scalars, e_sym.astype(jnp.float32)]
+    if masked:
+        in_specs.append(pl.BlockSpec((deg, 1), lambda i, b: (0, i),
+                                     memory_space=pltpu.SMEM))  # edge gates
+        args.append(bar_w.astype(jnp.float32))
+    in_specs += [
+        pl.BlockSpec((deg, 1, scales.shape[-1]), lambda i, b: (0, i, 0),
+                     memory_space=pltpu.SMEM),        # dequant scales
+        vec, vec, vec,               # theta, lam, bar_prev
+        wire_spec,
+    ]
+    args += [scales.astype(jnp.float32), theta, lam, bar_prev, wires]
+    ab = len(in_specs) - 4                            # position of theta
+
     theta_new, lam_new, bar, rsq, ssq = pl.pallas_call(
-        functools.partial(_round_kernel, deg),
+        functools.partial(_round_kernel_masked if masked else _round_kernel,
+                          deg),
         grid=(j, nblocks),
-        in_specs=[
-            smem,                        # block -> leaf table
-            pl.BlockSpec((3, 1), lambda i, b: (0, i),
-                         memory_space=pltpu.SMEM),        # per-node scalars
-            pl.BlockSpec((deg, 1), lambda i, b: (0, i),
-                         memory_space=pltpu.SMEM),        # e_sym
-            pl.BlockSpec((deg, 1, scales.shape[-1]), lambda i, b: (0, i, 0),
-                         memory_space=pltpu.SMEM),        # dequant scales
-            vec, vec, vec,               # theta, lam, bar_prev
-            wire_spec,
-        ],
+        in_specs=in_specs,
         out_specs=[vec, vec, vec, part, part],
         out_shape=[
             jax.ShapeDtypeStruct((j, total), theta.dtype),
@@ -304,8 +422,7 @@ def consensus_round(theta, lam, bar_prev, wires, scales, e_sym,
             jax.ShapeDtypeStruct((j, nblocks), jnp.float32),
         ],
         # in-place: theta->theta_new, lam->lam_new, bar_prev->bar
-        input_output_aliases={4: 0, 5: 1, 6: 2},
+        input_output_aliases={ab: 0, ab + 1: 1, ab + 2: 2},
         interpret=interpret,
-    )(block_leaf_arr, node_scalars, e_sym.astype(jnp.float32),
-      scales.astype(jnp.float32), theta, lam, bar_prev, wires)
+    )(*args)
     return theta_new, lam_new, bar, rsq.sum(axis=1), ssq.sum(axis=1)

@@ -71,11 +71,16 @@ def consensus_update(theta, lam, nbr_avg, theta_bar, theta_bar_prev, *,
 
 def consensus_round(theta, lam, bar_prev, wires, scales, e_sym,
                     alpha, eta_sum, eta_node, *, block_leaf, block_size,
-                    whole_rows: bool | None = None):
-    """Whole-round fused flat-buffer kernel (see consensus_update module)."""
+                    whole_rows: bool | None = None,
+                    bar_w=None, inv_deg=None):
+    """Whole-round fused flat-buffer kernel (see consensus_update module).
+
+    ``bar_w``/``inv_deg`` select the edge-gated dynamic-topology variant.
+    """
     return _cu.consensus_round(theta, lam, bar_prev, wires, scales, e_sym,
                                alpha, eta_sum, eta_node,
                                block_leaf=tuple(block_leaf),
                                block_size=block_size,
                                interpret=interpret_mode(),
-                               whole_rows=whole_rows)
+                               whole_rows=whole_rows,
+                               bar_w=bar_w, inv_deg=inv_deg)

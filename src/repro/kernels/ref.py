@@ -50,11 +50,14 @@ def rwkv6_scan_ref(r, k, v, log_w, u, s0):
 
 def consensus_round_ref(theta, lam, bar_prev, wires, scales, e_sym,
                         alpha, eta_sum, eta_node, *,
-                        block_leaf, block_size: int):
+                        block_leaf, block_size: int,
+                        bar_w=None, inv_deg=None):
     """Whole-round flat-buffer oracle (see consensus_update.consensus_round).
 
     Reductions are evaluated blockwise in the kernel's order so the fused
     and reference paths agree to float32 round-off, not just statistically.
+    ``bar_w``/``inv_deg`` mirror the kernel's dynamic-topology edge gating
+    (both None = the ungated PR 1 math).
     """
     j, total = theta.shape
     deg = wires.shape[0]
@@ -64,7 +67,13 @@ def consensus_round_ref(theta, lam, bar_prev, wires, scales, e_sym,
     x = wires.astype(jnp.float32) * scale_vec          # [deg, J, total]
     e = e_sym.astype(jnp.float32)[..., None]
     nbr_w = (e * x).sum(axis=0)
-    bar = x.sum(axis=0) * (1.0 / deg)
+    if bar_w is not None:
+        assert inv_deg is not None, "bar_w and inv_deg travel together"
+        w = bar_w.astype(jnp.float32)[..., None]       # [deg, J, 1]
+        bar = (w * x).sum(axis=0) \
+            * jnp.asarray(inv_deg, jnp.float32)[:, None]
+    else:
+        bar = x.sum(axis=0) * (1.0 / deg)
     eta_sum = jnp.asarray(eta_sum, jnp.float32)
     nbr = nbr_w / jnp.maximum(eta_sum, 1e-12)[:, None]
     theta32 = theta.astype(jnp.float32)

@@ -77,7 +77,8 @@ def collective_bytes(hlo_text: str) -> dict:
 
 
 def fused_round_roofline(model: "Model", mesh, *, compression: str,
-                         topology: str = "ring", block_size: int = 0) -> dict:
+                         topology: str = "ring", block_size: int = 0,
+                         dyn_topology=None) -> dict:
     """Analytic HBM/wire model of the fused flat-buffer consensus round.
 
     The Pallas round kernel is opaque to XLA's cost analysis (and runs in
@@ -88,9 +89,19 @@ def fused_round_roofline(model: "Model", mesh, *, compression: str,
     per operand. The naive per-leaf path is ~2 read-modify-write accumulator
     passes per offset plus a dequant materialization on top of the 6
     elementwise passes the fused kernel replaces.
+
+    Exchange-volume accounting uses ACTIVE edges: with a dynamic topology
+    (``dyn_topology``: a ``repro.topology.TopologyConfig``), a fully-gated
+    offset round skips its permute, so expected wire volume counts the
+    scheduler's expected ACTIVE OFFSETS (per-offset all-or-nothing — a
+    partially gated offset still permutes the whole buffer; dead spare
+    offsets cost nothing). The HBM model still streams the compiled offset
+    superset — wire buffers are stacked regardless. ``active_edge_frac``
+    reports the finer edge-level fraction (zero-math gated edges).
     """
     from repro.core.graph import build_graph
     from repro.optim import flatten
+    from repro.topology import TopologyConfig, TopologyRuntime
 
     import jax.numpy as jnp
 
@@ -98,10 +109,16 @@ def fused_round_roofline(model: "Model", mesh, *, compression: str,
     bs = block_size or flatten.auto_block_size(ap)
     lay = flatten.FlatLayout.for_tree(ap, block_size=bs, node_axis=False)
     j = int(mesh.shape["pod"])
-    deg = len(build_graph(topology, j).neighbor_offsets_ring()) or 1
+    topo_rt = TopologyRuntime(build_graph(topology, j),
+                              dyn_topology or TopologyConfig())
+    deg = len(topo_rt.offsets) or 1            # compiled offset superset
+    active_frac = topo_rt.expected_active_fraction()
+    # wire is per-OFFSET all-or-nothing: a permute is skipped only when its
+    # whole offset round is dead (dead spare offsets cost no wire)
+    active_offsets = topo_rt.expected_active_offsets() or 1.0
     n = lay.total
     tb = jnp.dtype(lay.wire_dtype).itemsize            # theta element bytes
-    wire_bytes = deg * lay.wire_bytes(compression)     # DCN per node/round
+    wire_bytes = int(active_offsets * lay.wire_bytes(compression))
     # kernel: read theta (tb) + lam/bar_prev (f32) + deg wires,
     #         write theta (tb) + lam/bar (f32)
     fused_hbm = n * (2 * tb + 4 * 4) + deg * lay.wire_bytes(compression)
@@ -111,6 +128,9 @@ def fused_round_roofline(model: "Model", mesh, *, compression: str,
     return {
         "flat_elems": n, "block_size": bs, "blocks": lay.num_blocks,
         "padding_frac": round(lay.waste_frac, 4),
+        "offsets_compiled": deg,
+        "active_edge_frac": round(active_frac, 4),
+        "active_offsets": round(active_offsets, 2),
         "wire_bytes_per_round": wire_bytes,
         "fused_hbm_bytes": fused_hbm,
         "fused_hbm_passes": round(fused_hbm / (n * 4), 2),
@@ -172,6 +192,7 @@ KNOBS = {
     "grad_rs": False,        # reduce-scatter grads to param shards
     "compression": "none",   # consensus exchange quantization
     "probe_frac": 1,         # probe-batch reduction for the consensus round
+    "topo_scheduler": "static",  # dynamic-topology edge scheduler
 }
 
 
@@ -192,13 +213,16 @@ def _compile_step(cfg: ArchConfig, cell: ShapeCell, mesh, *,
             moment_dtype=jnp.bfloat16 if cfg.moe is not None
             else jnp.float32)
         if consensus:
+            from repro.topology import TopologyConfig
             trainer = ConsensusTrainer(
                 model, mesh, adamw=acfg,
                 consensus=ConsensusConfig(
                     penalty=PenaltyConfig(scheme="nap", eta0=0.1),
                     topology="ring", local_steps=8,
                     compression=KNOBS["compression"],
-                    grad_rs=KNOBS["grad_rs"]))
+                    grad_rs=KNOBS["grad_rs"],
+                    dyn_topology=TopologyConfig(
+                        scheduler=KNOBS["topo_scheduler"])))
             state = trainer.abstract_state()
             state_sh = trainer.state_shardings()
             j = trainer.num_nodes
@@ -340,8 +364,10 @@ def lower_cell(cfg: ArchConfig, cell: ShapeCell, *, multi_pod: bool,
         rec["consensus"] = _corrected_record(cfg, cell, mesh,
                                              consensus=True,
                                              which="consensus")
+        from repro.topology import TopologyConfig as _TC
         rec["consensus"]["fused_round_model"] = fused_round_roofline(
-            model, mesh, compression=KNOBS["compression"])
+            model, mesh, compression=KNOBS["compression"],
+            dyn_topology=_TC(scheduler=KNOBS["topo_scheduler"]))
     rec["lower_compile_s"] = round(time.time() - t0, 1)
     main = rec[key]
     mf = model_flops(model, cell)

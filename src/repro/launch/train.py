@@ -27,7 +27,9 @@ from repro.launch.mesh import make_debug_mesh, make_production_mesh
 from repro.models import build_model
 from repro.optim import ConsensusConfig, ConsensusTrainer
 from repro.optim.adamw import AdamWConfig
-from repro.runtime import RetryPolicy, StragglerMonitor, with_retries
+from repro.runtime import (ElasticController, RetryPolicy, StragglerMonitor,
+                           with_retries)
+from repro.topology import SCHEDULERS as TOPO_SCHEDULERS, TopologyConfig
 
 
 def parse_args(argv=None):
@@ -43,6 +45,18 @@ def parse_args(argv=None):
     ap.add_argument("--multi-pod", action="store_true", default=True)
     ap.add_argument("--scheme", choices=SCHEMES, default="nap")
     ap.add_argument("--topology", default="ring")
+    ap.add_argument("--topo-scheduler", choices=TOPO_SCHEDULERS,
+                    default="static",
+                    help="dynamic-topology edge scheduler (repro.topology)")
+    ap.add_argument("--topo-churn", action="store_true",
+                    help="compile the churn offset superset so node drops "
+                         "are layout-preserving (no recompilation)")
+    ap.add_argument("--drop-node", default="",
+                    help="STEP:VICTIM — simulate losing pod VICTIM after "
+                         "STEP (debug-mesh churn drill; implies --topo-churn)")
+    ap.add_argument("--drop-stragglers", action="store_true",
+                    help="ghost a flagged straggler pod via the topology "
+                         "runtime instead of just logging it")
     ap.add_argument("--local-steps", type=int, default=4)
     ap.add_argument("--eta0", type=float, default=0.1)
     ap.add_argument("--lr", type=float, default=1e-2)
@@ -65,13 +79,19 @@ def main(argv=None):
     else:
         mesh = None
 
+    drop_at, drop_victim = (-1, -1)
+    if args.drop_node:
+        drop_at, drop_victim = (int(x) for x in args.drop_node.split(":"))
+    churn = args.topo_churn or args.drop_stragglers or drop_at >= 0
     trainer = ConsensusTrainer(
         model, mesh,
         adamw=AdamWConfig(lr=args.lr),
         consensus=ConsensusConfig(
             penalty=PenaltyConfig(scheme=args.scheme, eta0=args.eta0),
             topology=args.topology, local_steps=args.local_steps,
-            compression=args.compression))
+            compression=args.compression,
+            dyn_topology=TopologyConfig(scheduler=args.topo_scheduler,
+                                        churn=churn)))
     state = trainer.init_state(jax.random.PRNGKey(args.seed))
     start_step = 0
     if args.ckpt_dir and latest_steps(args.ckpt_dir):
@@ -89,6 +109,7 @@ def main(argv=None):
     train = jax.jit(trainer.train_step)
     _, cons = trainer.jit_step_fns()
     monitor = StragglerMonitor(trainer.num_nodes)
+    elastic = ElasticController(trainer.graph, topology=trainer.topo_rt)
     step_fn = with_retries(lambda s, b: train(s, b), RetryPolicy())
 
     def make_batch(step):
@@ -109,8 +130,26 @@ def main(argv=None):
             state, cm = cons(state, make_batch(10**6 + step))
             line += (f" | consensus r={float(cm['r_max']):.4f} "
                      f"eta={float(cm['eta_mean']):.4f}")
+            if trainer.dynamic:
+                line += f" active={float(cm['active_edges']):.2f}"
+        if step == drop_at:
+            # layout-preserving churn drill: ghost the victim, keep going —
+            # same compiled step fns, no restart (a topology epoch)
+            state = state._replace(topo=elastic.drop_preserving(
+                drop_victim, state.topo, step))
+            line += f" | dropped node {drop_victim} (topology epoch)"
         if slow:
             line += f" | stragglers: {slow}"
+            if args.drop_stragglers and trainer.dynamic:
+                for v in slow:
+                    # re-read liveness each drop: several stragglers may be
+                    # flagged in one step and the >2-survivors floor must
+                    # see the drops already applied
+                    alive = np.asarray(state.topo.node_alive)
+                    if alive[v] and alive.sum() > 2:
+                        state = state._replace(topo=elastic.drop_preserving(
+                            v, state.topo, step))
+                        line += f" | ghosted straggler {v}"
         print(line, flush=True)
         if args.ckpt_dir and (step + 1) % args.ckpt_every == 0:
             save_async(args.ckpt_dir, step + 1, state,

@@ -44,6 +44,8 @@ from repro.distributed import sharding as shd
 from repro.kernels import ref as kref
 from repro.optim import adamw as adamw_lib
 from repro.optim import flatten
+from repro.topology import (TopologyConfig, TopologyRuntime, TopologyState,
+                            active_edge_fraction)
 
 
 @dataclasses.dataclass(frozen=True)
@@ -56,6 +58,9 @@ class ConsensusConfig:
     use_fused_kernel: bool = True  # Pallas consensus_round (interpret on CPU)
     block_size: int = 0            # flat-layout block; 0 => auto
     grad_rs: bool = False          # reduce-scatter grads to param shards
+    # dynamic-topology runtime (repro.topology): the default static
+    # scheduler without churn keeps the engine on the exact PR 1 code path
+    dyn_topology: TopologyConfig = TopologyConfig()
 
 
 class TrainState(NamedTuple):
@@ -65,6 +70,7 @@ class TrainState(NamedTuple):
     theta_bar_prev: jax.Array  # [J, total] flat neighbor mean (eq. 5)
     penalty: PenaltyState  # [J, J] replicated
     step: jax.Array
+    topo: TopologyState    # [J, J] replicated — dynamic-topology runtime
 
 
 def _leading(tree, spec_fn):
@@ -86,8 +92,13 @@ class ConsensusTrainer:
         self.num_nodes = int(mesh.shape["pod"]) if self.has_pod else 1
         self.graph: Graph = build_graph(consensus.topology, self.num_nodes) \
             if self.num_nodes > 1 else build_graph("complete", 1)
-        self.offsets = (self.graph.neighbor_offsets_ring()
-                        if self.num_nodes > 1 else [])
+        # dynamic-topology runtime: offsets come from ITS superset (equal to
+        # the graph's circulant offsets unless churn adds spare offsets)
+        self.topo_cfg = consensus.dyn_topology
+        self.topo_cfg.validate_penalty(consensus.penalty)
+        self.topo_rt = TopologyRuntime(self.graph, self.topo_cfg)
+        self.dynamic = self.topo_cfg.is_dynamic and self.num_nodes > 1
+        self.offsets = self.topo_rt.offsets if self.num_nodes > 1 else []
         # rules for *inside* the pod-manual region: batch maps to data only
         rules = arch_rules(model.cfg, mesh)
         rules["batch"] = ("data",)
@@ -119,7 +130,8 @@ class ConsensusTrainer:
             lam=jnp.zeros(flat_shape, jnp.float32),
             theta_bar_prev=jnp.zeros(flat_shape, jnp.float32),
             penalty=init_penalty_state(self.ccfg.penalty, self.num_nodes),
-            step=jnp.zeros((), jnp.int32))
+            step=jnp.zeros((), jnp.int32),
+            topo=self.topo_rt.init_state())
 
     def abstract_state(self) -> TrainState:
         """ShapeDtypeStruct mirror for the dry-run (no allocation)."""
@@ -139,9 +151,13 @@ class ConsensusTrainer:
         pen = init_penalty_state(self.ccfg.penalty, self.num_nodes)
         pen = jax.tree_util.tree_map(
             lambda x: jax.ShapeDtypeStruct(x.shape, x.dtype), pen)
+        topo = jax.tree_util.tree_map(
+            lambda x: jax.ShapeDtypeStruct(x.shape, x.dtype),
+            self.topo_rt.init_state())
         return TrainState(params=params, opt=opt, lam=flat0,
                           theta_bar_prev=flat0, penalty=pen,
-                          step=jax.ShapeDtypeStruct((), jnp.int32))
+                          step=jax.ShapeDtypeStruct((), jnp.int32),
+                          topo=topo)
 
     def state_shardings(self) -> TrainState:
         """NamedShardings for every state leaf (pod-leading params etc.)."""
@@ -182,11 +198,13 @@ class ConsensusTrainer:
         # flat buffers: node-sharded rows, replicated within the pod (the
         # fused kernel consumes whole per-node rows; see docs/consensus_engine)
         flat_sh = NamedSharding(mesh, P("pod"))
+        topo_sh = jax.tree_util.tree_map(lambda _: rep,
+                                         self.topo_rt.init_state())
         return TrainState(
             params=params_sh,
             opt=adamw_lib.AdamWState(step=rep, m=opt_m, v=opt_v),
             lam=flat_sh, theta_bar_prev=flat_sh,
-            penalty=pen, step=rep)
+            penalty=pen, step=rep, topo=topo_sh)
 
     # ------------------------------------------------------- local steps ----
     def _local_loss(self, params, batch):
@@ -267,36 +285,48 @@ class ConsensusTrainer:
 
     # --------------------------------------------------- consensus round ----
     def _fused_round(self, theta_flat, lam_flat, bar_prev, wires, scales,
-                     e_stack, alpha, sym_sum, eta_node):
+                     e_stack, alpha, sym_sum, eta_node,
+                     bar_w=None, inv_deg=None):
         """One shard_map'd Pallas call over the whole flat buffer.
 
         Manual over ALL mesh axes with nothing but the kernel inside — the
         historical GSPMD-inside-manual miscompile does not apply because the
         region contains no auto-sharded ops. Each device runs the kernel on
         its pod's node row (replicated across the in-pod axes).
+
+        ``bar_w``/``inv_deg`` (dynamic topology) ride next to e_sym / the
+        node scalars: the traced edge gates select the masked kernel.
         """
         from repro.kernels import ops as kops
 
         lay = self.layout
         block_leaf = tuple(lay.block_leaf.tolist())
-
-        def local(theta, lam, barp, w, s, e, nsc):
-            tn, ln, bar, rsq, ssq = kops.consensus_round(
-                theta, lam, barp, w, s, e, nsc[0], nsc[1], nsc[2],
-                block_leaf=block_leaf, block_size=lay.block_size)
-            return tn, ln, bar, rsq, ssq
-
-        node_sc = jnp.stack([alpha, sym_sum, eta_node], axis=0)   # [3, J]
+        masked = bar_w is not None
         pod = P("pod")
+
+        # node scalars ride as one stacked [3|4, J] SMEM block; the traced
+        # edge gates (when present) are one extra [deg, J] operand
+        rows = [alpha, sym_sum, eta_node] + ([inv_deg] if masked else [])
+        node_sc = jnp.stack(rows, axis=0)
+        args = [theta_flat, lam_flat, bar_prev, wires, scales, e_stack] \
+            + ([bar_w] if masked else []) + [node_sc]
+        in_specs = (P("pod", None), P("pod", None), P("pod", None),
+                    P(None, "pod", None), P(None, "pod", None),
+                    P(None, "pod")) \
+            + ((P(None, "pod"),) if masked else ()) + (P(None, "pod"),)
+
+        def local(theta, lam, barp, w, s, e, *rest):
+            bw, nsc = rest if masked else (None, rest[0])
+            return kops.consensus_round(
+                theta, lam, barp, w, s, e, nsc[0], nsc[1], nsc[2],
+                block_leaf=block_leaf, block_size=lay.block_size,
+                bar_w=bw, inv_deg=nsc[3] if masked else None)
+
         fn = shd.shard_map_compat(
-            local, self.mesh,
-            in_specs=(P("pod", None), P("pod", None), P("pod", None),
-                      P(None, "pod", None), P(None, "pod", None),
-                      P(None, "pod"), P(None, "pod")),
+            local, self.mesh, in_specs=in_specs,
             out_specs=(P("pod", None), P("pod", None), P("pod", None),
                        pod, pod))
-        return fn(theta_flat, lam_flat, bar_prev, wires, scales,
-                  e_stack, node_sc)
+        return fn(*args)
 
     def consensus_step(self, state: TrainState, probe_batch: Any
                        ) -> tuple[TrainState, dict]:
@@ -331,6 +361,7 @@ class ConsensusTrainer:
         idx = jnp.arange(j)
         lay = self.layout
         int8 = self.ccfg.compression == "int8"
+        dynamic = self.dynamic
 
         # MoE blocks carry an inner expert-parallel shard_map, which XLA
         # cannot batch under vmap — probe those sequentially per node
@@ -361,25 +392,58 @@ class ConsensusTrainer:
         sym_sum = jnp.zeros((j,), jnp.float32)
         f_nbr = jnp.zeros((j, j), jnp.float32)
         payloads, scale_rows, e_rows = [], [], []
+        topo = state.topo
+        if dynamic:
+            mask_f = topo.mask.astype(jnp.float32)
+            act = jnp.zeros((j,), jnp.float32)
+            w_rows = []
+            payload_dtype = jnp.int8 if int8 else lay.wire_dtype
         for off in offsets:
-            # rolled[i] = wire_{(i+off) % j}: ONE collective-permute on pod
-            # moving the whole contiguous buffer (payload + in-band scales).
-            # The barrier pins the exchange to the wire dtype — without it
-            # XLA hoists the consumers' f32 upcast above the permute and a
-            # bf16 wire would cross the DCN at 4 B/param.
-            rolled = jax.lax.optimization_barrier(
-                jnp.roll(wire, -off, axis=0))
-            payload, scales = lay.decode_split(rolled)
             jidx = (idx + off) % j
-            f_off = vloss(lay.unpack(payload, scales=scales), probe_batch)
+
+            def _exchange(off=off):
+                # rolled[i] = wire_{(i+off) % j}: ONE collective-permute on
+                # pod moving the whole contiguous buffer (payload + in-band
+                # scales). The barrier pins the exchange to the wire dtype —
+                # without it XLA hoists the consumers' f32 upcast above the
+                # permute and a bf16 wire would cross the DCN at 4 B/param.
+                rolled = jax.lax.optimization_barrier(
+                    jnp.roll(wire, -off, axis=0))
+                payload, scales = lay.decode_split(rolled)
+                f_off = vloss(lay.unpack(payload, scales=scales),
+                              probe_batch)
+                return payload, (ones if scales is None else scales), f_off
+
+            if dynamic:
+                m_off = mask_f[idx, jidx]                          # [J]
+                if self.topo_cfg.skip_dead_offsets:
+                    # an all-gated offset round skips its permute AND its
+                    # probe at runtime; the mask is replicated so every
+                    # device takes the same branch. The dead branch probes
+                    # f_self (a no-op for the eq. 8 extremes).
+                    def _dead():
+                        return (jnp.zeros((j, lay.total), payload_dtype),
+                                ones, f_self)
+
+                    payload, scales_row, f_off = jax.lax.cond(
+                        m_off.sum() > 0, _exchange, _dead)
+                else:
+                    payload, scales_row, f_off = _exchange()
+                # the traced gate flows into the edge weights: a masked
+                # edge costs zero math in the fused kernel
+                e_sym = 0.5 * (eta[idx, jidx] + eta[jidx, idx]) * m_off
+                act = act + m_off
+                w_rows.append(m_off)
+            else:
+                payload, scales_row, f_off = _exchange()
+                e_sym = 0.5 * (eta[idx, jidx] + eta[jidx, idx])    # [J]
             # scatter-free write of F[i, (i+off)%j]: static circulant mask
             # (an .at[].set scatter costs extra collective-permutes on SPMD)
             mask = jnp.asarray(np.roll(np.eye(j), off, axis=1), jnp.float32)
             f_nbr = f_nbr + f_off[:, None] * mask
-            e_sym = 0.5 * (eta[idx, jidx] + eta[jidx, idx])    # [J]
             sym_sum = sym_sum + e_sym
             payloads.append(payload)
-            scale_rows.append(ones if scales is None else scales)
+            scale_rows.append(scales_row)
             e_rows.append(e_sym)
 
         wires = jnp.stack(payloads)                 # [deg, J, total]
@@ -388,34 +452,86 @@ class ConsensusTrainer:
 
         # -- fused round: dequant + means + prox + dual + residuals --------
         alpha = self.ccfg.prox_step / (1.0 + 2.0 * sym_sum)    # [J]
-        eta_node = sym_sum / deg
+        if dynamic:
+            # active-degree neighbor mean; ghosts (degree 0) get bar = 0
+            inv_deg = jnp.where(act > 0, 1.0 / jnp.maximum(act, 1.0), 0.0)
+            eta_node = sym_sum * inv_deg
+            bar_w = jnp.stack(w_rows)               # [deg, J]
+        else:
+            eta_node = sym_sum / deg
+            bar_w = inv_deg = None
         if self.ccfg.use_fused_kernel:
             theta_new, lam_new, bar_new, r_sq, s_sq = self._fused_round(
                 theta_flat, state.lam, state.theta_bar_prev, wires, scales,
-                e_stack, alpha, sym_sum, eta_node)
+                e_stack, alpha, sym_sum, eta_node,
+                bar_w=bar_w, inv_deg=inv_deg)
         else:
             theta_new, lam_new, bar_new, r_sq, s_sq = \
                 kref.consensus_round_ref(
                     theta_flat, state.lam, state.theta_bar_prev, wires,
                     scales, e_stack, alpha, sym_sum, eta_node,
-                    block_leaf=lay.block_leaf, block_size=lay.block_size)
+                    block_leaf=lay.block_leaf, block_size=lay.block_size,
+                    bar_w=bar_w, inv_deg=inv_deg)
 
         params_new = lay.unpack(theta_new)
         r_norm = jnp.sqrt(r_sq)
         s_norm = jnp.sqrt(s_sq)
 
+        if dynamic:
+            # penalties keep adapting on gated GRAPH edges (the eq. 10
+            # top-up must still see them to revive) and on repair edges,
+            # but never on ghost rows/cols
+            alive = topo.node_alive
+            adj_pen = (adj & alive[:, None] & alive[None, :]) | topo.mask
+        else:
+            adj_pen = adj
         penalty_new = update_penalty(
-            pcfg, state.penalty, adj=adj, f_self=f_self, f_nbr=f_nbr,
+            pcfg, state.penalty, adj=adj_pen, f_self=f_self, f_nbr=f_nbr,
             r_norm=r_norm, s_norm=s_norm)
+        topo_new = self.topo_rt.update(topo, penalty=penalty_new,
+                                       r_norm=r_norm) if dynamic else topo
         new = state._replace(params=params_new, lam=lam_new,
-                             theta_bar_prev=bar_new, penalty=penalty_new)
+                             theta_bar_prev=bar_new, penalty=penalty_new,
+                             topo=topo_new)
+        if dynamic:
+            # ghost and zero-active-degree rows have bar = 0, so their
+            # "residual" is the full parameter norm; an isolated node has
+            # no consensus constraint — exclude both from the extremes
+            alive_f = topo.node_alive.astype(jnp.float32) \
+                * (act > 0).astype(jnp.float32)
+            r_rep, s_rep = r_norm * alive_f, s_norm * alive_f
+            f_rep = (f_self * alive_f).sum() / jnp.maximum(alive_f.sum(), 1)
+        else:
+            r_rep, s_rep, f_rep = r_norm, s_norm, f_self.mean()
         metrics = {
-            "r_max": r_norm.max(), "s_max": s_norm.max(),
-            "f_mean": f_self.mean(),
+            "r_max": r_rep.max(), "s_max": s_rep.max(),
+            "f_mean": f_rep,
             "eta_mean": jnp.where(adj, penalty_new.eta, 0.0).sum()
             / jnp.maximum(adj.sum(), 1),
+            "active_edges": (active_edge_fraction(topo, adj) if dynamic
+                             else jnp.ones(())),
         }
         return new, metrics
+
+    # ------------------------------------------------------------- churn ----
+    def apply_churn(self, state: TrainState, victim: int) -> TrainState:
+        """Host-side layout-preserving node drop — a topology epoch, not a
+        crash, and NOT a recompilation: the [J, ...] shapes are unchanged,
+        only ``state.topo`` (liveness, mask, repair edges) is rewritten.
+
+        The compiled step functions keep executing; the victim becomes a
+        ghost row whose edges all cost zero math. Requires a dynamic
+        topology config (``churn=True`` or a non-static scheduler) so the
+        engine compiled the masked kernel and the repair offset superset.
+        """
+        if not self.dynamic:
+            raise ValueError(
+                "node churn needs ConsensusConfig.dyn_topology with "
+                "churn=True (or a non-static scheduler)")
+        # drop_node preserves the old leaves' committed shardings, so the
+        # jitted step functions keep their cache
+        return state._replace(topo=self.topo_rt.drop_node(state.topo,
+                                                          victim))
 
     # ------------------------------------------------------------ driver ----
     def jit_step_fns(self):

@@ -2,10 +2,18 @@
 
 A unique property of consensus-ADMM training (vs. a global all-reduce): the
 optimizer *tolerates a missing neighbor* — dropping an edge or a node leaves
-a smaller but still-valid consensus problem. The elastic path below exploits
-exactly that: on node failure we shrink the graph (``core.graph.drop_node``),
-remap the surviving eta/budget edges, and keep training; a synchronous-DP
-framework would have to abort the step.
+a smaller but still-valid consensus problem. Two elastic paths exploit that:
+
+  * **layout-preserving** (preferred, ``ElasticController.drop_preserving``):
+    the lost pod becomes a masked ghost row in the dynamic-topology state
+    (``repro.topology``) — array shapes, jit caches and the fused step all
+    survive untouched; the runtime rewires the surviving nodes through the
+    compiled offset superset and asserts connectivity. A node loss is a
+    topology epoch, not a crash.
+  * **shrinking** (legacy, ``ElasticController.drop``): rebuild the graph at
+    J-1 (``core.graph.drop_node``) and remap the surviving eta/budget edges
+    — a restart from checkpoint into the smaller mesh; a synchronous-DP
+    framework would have to abort the step either way.
 
 Wall-clock monitoring is injectable (``clock``) so straggler logic is unit-
 testable on CPU without real slow hosts.
@@ -110,19 +118,23 @@ class ElasticEvent:
     victim: int
     old_nodes: int
     new_nodes: int
+    mode: str = "shrink"          # shrink | preserve
 
 
 class ElasticController:
-    """Drives graph + penalty-state rescale when a node is lost.
+    """Drives the consensus-problem rescale when a node is lost.
 
-    The parameter/optimizer state handling (re-sharding [J, ...] arrays to
-    [J-1, ...]) is the launcher's job — on a real fleet this is a restart
-    from the latest checkpoint into the smaller mesh; the controller decides
-    *what the new consensus problem is*.
+    Two modes (module docstring): ``drop`` shrinks the graph and penalty
+    state to J-1 (the launcher restarts into the smaller mesh); with a
+    ``topology`` runtime attached, ``drop_preserving`` instead ghosts the
+    victim in the traced TopologyState — shapes, jit caches and the fused
+    step survive, so training continues without a restart. The controller
+    decides *what the new consensus problem is* either way.
     """
 
-    def __init__(self, graph: Graph):
+    def __init__(self, graph: Graph, *, topology=None):
         self.graph = graph
+        self.topology = topology          # optional TopologyRuntime
         self.events: list[ElasticEvent] = []
 
     def drop(self, victim: int, penalty: PenaltyState, step: int
@@ -134,3 +146,20 @@ class ElasticController:
                                         old_nodes=old,
                                         new_nodes=self.graph.num_nodes))
         return self.graph, new_pen
+
+    def drop_preserving(self, victim: int, topo_state, step: int):
+        """Layout-preserving drop -> new TopologyState (no shapes change).
+
+        The penalty state is NOT shrunk: the engine masks ghost rows/cols
+        out of the penalty adjacency, preserving surviving edges' full
+        adaptation history at the original [J, J] layout.
+        """
+        if self.topology is None:
+            raise ValueError("drop_preserving needs a TopologyRuntime "
+                             "(ElasticController(graph, topology=...))")
+        new_state = self.topology.drop_node(topo_state, victim)
+        alive = int(np.asarray(new_state.node_alive).sum())
+        self.events.append(ElasticEvent(step=step, victim=victim,
+                                        old_nodes=self.graph.num_nodes,
+                                        new_nodes=alive, mode="preserve"))
+        return new_state

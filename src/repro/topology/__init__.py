@@ -1,0 +1,18 @@
+"""Dynamic-topology runtime: traced edge gating, churn and rewiring.
+
+See ``docs/topology.md`` for the state machine and the scheduler contract.
+"""
+from repro.topology.schedulers import (SCHEDULERS, TopologyConfig,
+                                       budget_gate, update_topology)
+from repro.topology.state import (TopologyState, active_degree,
+                                  active_edge_fraction, advance,
+                                  compose_mask, init_topology_state)
+from repro.topology.runtime import (TopologyRuntime, rotation_masks,
+                                    spanning_backbone)
+
+__all__ = [
+    "SCHEDULERS", "TopologyConfig", "budget_gate", "update_topology",
+    "TopologyState", "active_degree", "active_edge_fraction", "advance",
+    "compose_mask", "init_topology_state",
+    "TopologyRuntime", "rotation_masks", "spanning_backbone",
+]

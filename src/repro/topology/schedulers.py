@@ -1,0 +1,165 @@
+"""Pluggable edge-gating schedulers for the dynamic-topology runtime.
+
+A scheduler is a pure, traced function deciding which graph edges take part
+in the NEXT consensus round. It sees the penalty state (for the paper's §4
+budget semantics), the local residuals, and the epoch counter — and returns
+a [J, J] bool *pattern* that ``topology.state.compose_mask`` combines with
+the never-gated backbone, churn repairs and node liveness. Every scheduler
+is recompilation-free: the decision is data, not program.
+
+Schedulers:
+
+  * ``static``      — the full graph every epoch (PR 1 behavior, default).
+  * ``budget``      — paper §4 made literal: an edge deactivates once its
+                      NAP budget is exhausted (cum_tau >= T_ij in BOTH
+                      directions) and both endpoints sit below the consensus
+                      tolerance; a budget top-up (eq. 10) revives it.
+  * ``random``      — Iutzeler-style Bernoulli edge activation with keep
+                      probability ``activation_p``, redrawn every ``period``
+                      epochs (deterministic per epoch via fold_in).
+  * ``round_robin`` — rotates through the graph's permutation rounds (edge
+                      coloring): each epoch activates one matching, so every
+                      node talks to at most one peer per direction.
+
+Connectivity: no scheduler is trusted to keep the masked graph connected on
+its own — the backbone does that by construction (see ``topology.state``).
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.penalty import PenaltyState, budget_exhausted
+from repro.topology.state import TopologyState, advance, compose_mask
+
+SCHEDULERS = ("static", "budget", "random", "round_robin")
+
+
+@dataclasses.dataclass(frozen=True)
+class TopologyConfig:
+    """Dynamic-topology knobs.
+
+    Attributes:
+      scheduler: one of ``SCHEDULERS``. ``static`` + ``churn=False`` (the
+        default) keeps the engine on the exact PR 1 code path.
+      churn: enable layout-preserving node churn — the engine compiles
+        against the offset *superset* (graph offsets + ``spare_offsets``)
+        and a lost pod becomes a masked ghost row instead of a crash.
+      gate_tol: ``budget`` — an edge may only deactivate once both
+        endpoints' primal residual norms are below this. Set it WELL below
+        (~100x) the residual level you run to: a gated edge's remaining
+        disagreement can only decay through the sparser surviving graph,
+        so gating above your target accuracy trades iterations for wire.
+      activation_p: ``random`` — per-edge Bernoulli keep probability.
+      period: epochs between redraws (``random``) / rotations
+        (``round_robin``).
+      spare_offsets: extra circulant offsets compiled into the engine's
+        exchange superset for churn repair; () = auto ((2, J-2) when churn
+        is on and the graph doesn't already include them).
+      skip_dead_offsets: engine only — wrap each offset's exchange in a
+        ``lax.cond`` so a fully-gated offset round skips its
+        collective-permute and probe at runtime (the mask is replicated, so
+        every device takes the same branch).
+      seed: PRNG seed for the ``random`` scheduler.
+    """
+
+    scheduler: str = "static"
+    churn: bool = False
+    gate_tol: float = 1e-4
+    activation_p: float = 0.5
+    period: int = 1
+    spare_offsets: tuple = ()
+    skip_dead_offsets: bool = True
+    seed: int = 0
+
+    def __post_init__(self):
+        if self.scheduler not in SCHEDULERS:
+            raise ValueError(
+                f"scheduler {self.scheduler!r} not in {SCHEDULERS}")
+        if not 0.0 < self.activation_p <= 1.0:
+            raise ValueError(f"activation_p {self.activation_p} not in (0,1]")
+        if self.period < 1:
+            raise ValueError(f"period {self.period} < 1")
+
+    @property
+    def is_dynamic(self) -> bool:
+        """Whether the engine needs the masked (non-PR-1) code path."""
+        return self.scheduler != "static" or self.churn
+
+    def validate_penalty(self, penalty_cfg) -> None:
+        """Reject scheduler/penalty pairings that silently do nothing."""
+        if self.scheduler == "budget" and not penalty_cfg.uses_budget:
+            raise ValueError(
+                f"budget topology scheduler needs a budget-spending penalty "
+                f"scheme (nap/vp_nap), got {penalty_cfg.scheme!r} — its "
+                f"gate would never fire and the mask would stay static")
+
+
+def budget_gate(penalty: PenaltyState, r_norm: jax.Array,
+                gate_tol: float,
+                prev_off: jax.Array | None = None) -> jax.Array:
+    """[J, J] bool — edges the §4 budget semantics says may deactivate.
+
+    True where BOTH directed budgets are exhausted (cum_tau >= T_ij, the
+    eq. 9 gate that freezes adaptation) AND both endpoints' local primal
+    residuals are below ``gate_tol`` (the edge has done its consensus job).
+
+    ``prev_off`` (edges gated last epoch) latches the gate: a gated edge
+    stays gated while exhausted even if residuals drift back up — revival
+    happens ONLY through a budget top-up (eq. 10), which raises T_ij above
+    cum_tau and flips ``exhausted`` off. Without the latch the gate flaps
+    around the tolerance (gate -> drift -> revive -> re-converge -> gate).
+    """
+    exhausted = budget_exhausted(penalty)
+    exhausted = exhausted & exhausted.T
+    close = r_norm < gate_tol
+    gate = close[:, None] & close[None, :]
+    if prev_off is not None:
+        gate = gate | prev_off
+    return exhausted & gate
+
+
+def update_topology(cfg: TopologyConfig, state: TopologyState, *,
+                    adj: jax.Array,
+                    penalty: PenaltyState | None = None,
+                    r_norm: jax.Array | None = None,
+                    rotation: jax.Array | None = None) -> TopologyState:
+    """One scheduler epoch: decide the pattern, compose, advance counters.
+
+    Args:
+      adj: [J, J] bool — the static graph adjacency (constant under jit).
+      penalty / r_norm: required for ``budget``.
+      rotation: [R, J, J] bool stack of rotation patterns, required for
+        ``round_robin`` (precomputed by ``TopologyRuntime``).
+    """
+    adj = adj.astype(bool)
+
+    if cfg.scheduler == "static":
+        pattern = adj
+
+    elif cfg.scheduler == "budget":
+        assert penalty is not None and r_norm is not None, cfg.scheduler
+        prev_off = adj & ~state.mask       # backbone edges never appear here
+        pattern = adj & ~budget_gate(penalty, r_norm.astype(jnp.float32),
+                                     cfg.gate_tol, prev_off)
+
+    elif cfg.scheduler == "random":
+        # deterministic per-epoch draw: same key within a period
+        key = jax.random.fold_in(state.key, state.t // cfg.period)
+        j = adj.shape[0]
+        u = jax.random.uniform(key, (j, j))
+        u = jnp.triu(u, 1)
+        keep = (u + u.T) < cfg.activation_p        # symmetric by build
+        pattern = adj & keep
+
+    elif cfg.scheduler == "round_robin":
+        assert rotation is not None, "round_robin needs rotation masks"
+        phase = (state.t // cfg.period) % rotation.shape[0]
+        pattern = adj & rotation[phase]
+
+    else:  # pragma: no cover
+        raise AssertionError(cfg.scheduler)
+
+    return advance(state, compose_mask(pattern, state, adj))

@@ -1,0 +1,88 @@
+"""Traced dynamic-topology state for the consensus engine.
+
+The paper's §4 observation — budget-gated penalty adaptation "effectively
+leads to an adaptive, dynamic network topology" — is promoted here to a
+first-class, *traced* runtime object. ``TopologyState`` carries a per-edge
+active mask (``[J, J]``, like ``PenaltyState``) plus per-edge epoch counters
+and node-liveness, so edges can drop, revive and rewire between ADMM rounds
+without recompiling anything: the compiled step consumes the mask as data.
+
+Composition of the mask (all [J, J] bool, symmetric, zero diagonal):
+
+    mask = (pattern & adj  |  backbone  |  repair) & alive_i & alive_j
+
+  * ``pattern``  — what the scheduler decided this epoch (see
+    ``topology.schedulers``);
+  * ``backbone`` — a static spanning subgraph that is never gated, the
+    connectivity guarantee (stored on the state so churn can rewrite it);
+  * ``repair``   — extra edges activated by the churn runtime when a node
+    loss breaks the backbone (see ``topology.runtime``);
+  * ``node_alive`` — row/col liveness; a dead pod's edges are all inactive
+    ("ghost row": the layout keeps shape [J, ...], only the mask changes).
+
+Epoch counters increment whenever an edge flips active<->inactive — they
+are the per-edge analogue of ``PenaltyState.n_incr`` and feed monitoring
+(how often does the scheduler churn this edge?).
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+class TopologyState(NamedTuple):
+    """Traced per-edge topology state. All [J, J] except node_alive [J]."""
+
+    mask: jax.Array        # [J, J] bool — edges active for the NEXT round
+    backbone: jax.Array    # [J, J] bool — never-gated spanning subgraph
+    repair: jax.Array      # [J, J] bool — churn-activated rewiring edges
+    node_alive: jax.Array  # [J]    bool — pod liveness (ghost rows when False)
+    epoch: jax.Array       # [J, J] int32 — per-edge flip counters
+    key: jax.Array         # PRNG key (random scheduler)
+    t: jax.Array           # []     int32 epoch counter
+
+
+def init_topology_state(adj: np.ndarray, backbone: np.ndarray,
+                        *, seed: int = 0) -> TopologyState:
+    """Fresh state: every graph edge active, everyone alive, epoch zero."""
+    adj = np.asarray(adj, dtype=bool)
+    j = adj.shape[0]
+    return TopologyState(
+        mask=jnp.asarray(adj),
+        backbone=jnp.asarray(np.asarray(backbone, dtype=bool)),
+        repair=jnp.zeros((j, j), bool),
+        node_alive=jnp.ones((j,), bool),
+        epoch=jnp.zeros((j, j), jnp.int32),
+        key=jax.random.PRNGKey(seed),
+        t=jnp.zeros((), jnp.int32))
+
+
+def compose_mask(pattern: jax.Array, state: TopologyState,
+                 adj: jax.Array) -> jax.Array:
+    """Apply the mask composition rule (module docstring) to a pattern."""
+    alive = state.node_alive
+    m = (pattern & adj) | (state.backbone | state.repair)
+    return m & alive[:, None] & alive[None, :]
+
+
+def advance(state: TopologyState, new_mask: jax.Array,
+            key: jax.Array | None = None) -> TopologyState:
+    """Install a new mask, bumping per-edge epochs where edges flipped."""
+    flipped = (new_mask != state.mask).astype(jnp.int32)
+    return state._replace(mask=new_mask, epoch=state.epoch + flipped,
+                          key=state.key if key is None else key,
+                          t=state.t + 1)
+
+
+def active_degree(state: TopologyState) -> jax.Array:
+    """[J] float32 — number of active edges per node."""
+    return state.mask.astype(jnp.float32).sum(axis=1)
+
+
+def active_edge_fraction(state: TopologyState, adj: jax.Array) -> jax.Array:
+    """Scalar — active edges as a fraction of the static graph's edges."""
+    adj_n = jnp.maximum(adj.astype(jnp.float32).sum(), 1.0)
+    return state.mask.astype(jnp.float32).sum() / adj_n
