@@ -1,0 +1,199 @@
+"""Straggler benchmark: bounded-staleness executor vs the sync engine.
+
+Setup (8 fake devices, J=4 pods, reduced LM): diverge the node replicas
+with a few local optimizer steps, then run PURE consensus rounds until one
+COMMON absolute residual bar (``drop_frac`` x the starting r_max — the §5
+stop-criterion idea applied to the quantity the rounds drive, with the
+same bar for both executors) under an injected 2x-slow node:
+
+  * sync    — every round barriers on the slow node AND serializes the
+              exchange: ``round_s = max(compute) + wire``;
+  * async   — bounded staleness ``N``: the fleet ticks at the fast nodes'
+              cadence, permutes double-buffer behind compute, and the slow
+              node's payloads land a round late (its rows advance at its
+              own rate via the executor's ``advance`` mask).
+
+The NUMERICS are real (stale payloads feed the fused kernel; the final
+objective is measured, not modeled). The WALL-CLOCK is the ``RoundClock``
+event model with stated constants: fast-node round time = 1 unit,
+straggler = ``factor`` units, wire = ``wire_frac`` units (0.5 = the
+LM-scale regime where a full-parameter DCN exchange costs half the local
+phase — see ``fused_round_roofline``; a wire_frac=0 row is reported too so
+the barrier-only effect is visible). The async side is RE-SIMULATED per
+wire point with the clock carrying that latency, so the arrival dynamics
+the tick count reflects are the same ones the wall-clock model prices.
+
+Acceptance (asserted in ``main``): >= 1.3x modeled wall-clock speedup at
+wire_frac 0.5 with the final objective unchanged within 2%.
+
+Writes ``BENCH_async.json`` under ``benchmarks/results/``;
+``benchmarks/run.py --full`` promotes it to the committed root baseline.
+Needs 8 devices — run via ``benchmarks/run.py --only async`` or with
+``XLA_FLAGS=--xla_force_host_platform_device_count=8``.
+"""
+from __future__ import annotations
+
+import argparse
+
+import numpy as np
+
+
+def _build(j, async_cfg, scheduler, max_staleness):
+    from repro.configs import get_reduced_config
+    from repro.core.penalty import PenaltyConfig
+    from repro.data import DataConfig, SyntheticTokens
+    from repro.launch.mesh import make_mesh
+    from repro.models import build_model
+    from repro.optim import ConsensusConfig, ConsensusTrainer
+    from repro.optim.adamw import AdamWConfig
+    from repro.topology import TopologyConfig
+
+    mesh = make_mesh((j, 2, 1), ("pod", "data", "model"))
+    cfg = get_reduced_config("qwen3-4b")
+    model = build_model(cfg)
+    data = SyntheticTokens(DataConfig(vocab=cfg.vocab, seq_len=32,
+                                      batch_per_node=2, num_nodes=j))
+    trainer = ConsensusTrainer(
+        model, mesh, adamw=AdamWConfig(lr=1e-2),
+        consensus=ConsensusConfig(
+            penalty=PenaltyConfig(scheme="nap", eta0=0.1),
+            topology="ring", local_steps=1,
+            dyn_topology=TopologyConfig(scheduler=scheduler,
+                                        max_staleness=max_staleness),
+            async_exec=async_cfg))
+    return trainer, data
+
+
+def _diverge(trainer, data, diverge_steps, seed=0):
+    import jax
+    state = trainer.init_state(jax.random.PRNGKey(seed))
+    train = jax.jit(trainer.train_step)
+    for s in range(diverge_steps):
+        state, _ = train(state, data.batch(s))
+    return state
+
+
+def _run_until(step_round, state, probe, *, target, max_rounds):
+    """Rounds until the consensus residual r_max drops to ``target``.
+
+    One common ABSOLUTE residual bar for both executors (sync sets it from
+    its own start) — "rounds to the same consensus progress", immune to
+    stop-criterion asymmetries between the two metrics streams. The async
+    r_max covers ADVANCING nodes only, so two consecutive sub-target ticks
+    are required: with a 2x straggler that spans both fleet phases, i.e.
+    the laggard's own row has cleared the bar too.
+    """
+    hist = []
+    below = 0
+    for r in range(max_rounds):
+        state, m = step_round(state, probe)
+        hist.append((float(m["r_max"]), float(m["f_mean"])))
+        below = below + 1 if hist[-1][0] <= target else 0
+        if below >= 2:
+            return state, r + 1, hist
+    return state, max_rounds, hist
+
+
+def run(*, smoke: bool = False, j: int = 4, factor: float = 2.0,
+        max_staleness: int = 2, diverge_steps: int = 4,
+        wire_fracs=(0.0, 0.5), drop_frac: float = 0.5,
+        max_rounds: int = 60) -> dict:
+    import jax
+    from benchmarks.common import write_csv, write_json
+    from repro.async_exec import (AsyncConfig, AsyncExecutor, RoundClock,
+                                  straggler_compute)
+
+    if smoke:
+        max_rounds, drop_frac = 40, 0.6
+
+    # ---- sync reference (barrier executor) -----------------------------
+    tr_sync, data = _build(j, None, "static", max_staleness)
+    probe = data.batch(0, probe=True)
+    state = _diverge(tr_sync, data, diverge_steps)
+    _, cons = tr_sync.jit_step_fns()
+    # one throwaway probe round (undonated jit) sets the common residual bar
+    _, m0 = jax.jit(tr_sync.consensus_step)(state, probe)
+    target = drop_frac * float(m0["r_max"])
+    state_s, rounds_sync, hist_s = _run_until(
+        lambda s, p: cons(s, p), state, probe,
+        target=target, max_rounds=max_rounds)
+    f_sync, r_sync0, r_syncF = hist_s[-1][1], hist_s[0][0], hist_s[-1][0]
+
+    # ---- async with an injected straggler: ONE RUN PER WIRE POINT ------
+    # the clock carries the wire latency it prices — arrivals at wf=0.5
+    # really land half a round late, so the staleness dynamics (and the
+    # tick count) are faithful to the wall-clock model, not optimistic
+    rows = []
+    drifts, r_finals, rounds_done = {}, {}, {}
+    for wf in wire_fracs:
+        tr_async, data = _build(j, AsyncConfig(max_staleness=max_staleness),
+                                "stale", max_staleness)
+        state = _diverge(tr_async, data, diverge_steps)
+        clock = RoundClock(
+            compute_s=straggler_compute(j, base_s=1.0, factor=factor),
+            wire_s=wf, offsets=tuple(tr_async.offsets))
+        ex = AsyncExecutor(tr_async, clock)
+        state_a, ticks_async, hist_a = _run_until(
+            ex.consensus_round, state, probe,
+            target=target, max_rounds=max_rounds)
+        f_async, r_finals[wf] = hist_a[-1][1], hist_a[-1][0]
+        drifts[wf] = abs(f_async - f_sync) / (abs(f_sync) + 1e-12)
+        rounds_done[wf] = ex.summary()["rounds_done"]
+        sync_round_s = factor + wf            # barrier + serialized wire
+        async_tick_s = 1.0                    # wire double-buffered away
+        wall_sync = rounds_sync * sync_round_s
+        wall_async = ticks_async * async_tick_s
+        rows.append({
+            "wire_frac": wf, "factor": factor,
+            "rounds_sync": rounds_sync, "ticks_async": ticks_async,
+            "wall_sync": round(wall_sync, 3),
+            "wall_async": round(wall_async, 3),
+            "speedup": round(wall_sync / max(wall_async, 1e-9), 3),
+            "f_async": round(f_async, 6),
+        })
+        print(f"async_staleness wire_frac={wf:.2f} "
+              f"sync={rounds_sync}r x {sync_round_s:.2f} "
+              f"async={ticks_async}t x {async_tick_s:.2f} "
+              f"speedup={rows[-1]['speedup']:.2f}x "
+              f"drift={drifts[wf]:.3%}", flush=True)
+
+    obj_drift = max(drifts.values())
+    bench = {
+        "j": j, "factor": factor, "max_staleness": max_staleness,
+        "smoke": smoke, "drop_frac": drop_frac,
+        "r_target": round(target, 4),
+        "f_sync": round(f_sync, 6),
+        "objective_drift": round(obj_drift, 6),
+        "r_start": round(r_sync0, 4),
+        "r_final_sync": round(r_syncF, 4),
+        "r_final_async": {str(k): round(v, 4) for k, v in r_finals.items()},
+        "straggler_rounds_done": {str(k): v
+                                  for k, v in rounds_done.items()},
+        "rows": rows,
+    }
+    write_csv("async_staleness.csv", rows)
+    write_json("BENCH_async.json", bench)
+    print(f"async_staleness: f_sync={f_sync:.4f} "
+          f"max_drift={obj_drift:.3%}", flush=True)
+    return bench
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true",
+                    help="reduced caps for CI")
+    ap.add_argument("--factor", type=float, default=2.0)
+    ap.add_argument("--max-staleness", type=int, default=2)
+    args = ap.parse_args(argv)
+    bench = run(smoke=args.smoke, factor=args.factor,
+                max_staleness=args.max_staleness)
+    # acceptance: >=1.3x at the LM-scale wire point, objective unchanged
+    by_wf = {r["wire_frac"]: r for r in bench["rows"]}
+    assert by_wf[0.5]["speedup"] >= 1.3, by_wf
+    assert bench["objective_drift"] < 0.02, bench
+    print("async_staleness: OK")
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

@@ -1,4 +1,15 @@
-"""Shared benchmark utilities."""
+"""Shared benchmark utilities.
+
+Output layout (single-writer rule):
+
+  * every benchmark module writes ONLY under ``benchmarks/results/`` —
+    CSVs via ``write_csv``, JSON artifacts via ``write_json``;
+  * the repo-root ``BENCH_*.json`` files are the COMMITTED baselines.
+    ``benchmarks/run.py`` is their single writer: it promotes a cell's
+    ``results/BENCH_*.json`` to the root via ``promote_baseline`` after
+    the cell succeeds (full-grid runs only, so CI smoke grids can never
+    clobber a committed baseline).
+"""
 from __future__ import annotations
 
 import contextlib
@@ -6,6 +17,7 @@ import csv
 import io
 import json
 import os
+import shutil
 import sys
 import time
 
@@ -25,16 +37,28 @@ def write_csv(name: str, rows: list[dict]):
     return path
 
 
-def write_json(name: str, obj, *, repo_root: bool = False):
-    """Write a JSON artifact; ``repo_root=True`` puts it at the repo root
-    (committed perf baselines like BENCH_consensus.json live there)."""
-    base = REPO_ROOT if repo_root else RESULTS_DIR
-    os.makedirs(base, exist_ok=True)
-    path = os.path.join(base, name)
+def write_json(name: str, obj):
+    """Write a JSON artifact under ``benchmarks/results/`` (always)."""
+    os.makedirs(RESULTS_DIR, exist_ok=True)
+    path = os.path.join(RESULTS_DIR, name)
     with open(path, "w") as f:
         json.dump(obj, f, indent=1, sort_keys=True)
         f.write("\n")
     return path
+
+
+def promote_baseline(name: str) -> str | None:
+    """Copy ``results/<name>`` to the repo root (the committed baseline).
+
+    ONLY ``benchmarks/run.py`` calls this — the single-writer rule that
+    keeps benchmark modules from clobbering committed baselines.
+    """
+    src = os.path.join(RESULTS_DIR, name)
+    if not os.path.exists(src):
+        return None
+    dst = os.path.join(REPO_ROOT, name)
+    shutil.copyfile(src, dst)
+    return dst
 
 
 class timer:

@@ -5,9 +5,10 @@ engine) vs unfused (blockwise jnp reference) consensus round time, the
 effect of int8 exchange compression, and the communication-volume ratio of
 consensus-every-H vs all-reduce-every-step (analytic).
 
-Emits ``BENCH_consensus.json`` at the repo root — the committed perf
-baseline tracking round ms, wire bytes per round and the HBM-pass estimate
-of the fused engine from PR 1 on.
+Emits ``BENCH_consensus.json`` under ``benchmarks/results/``; the
+repo-root copy is the committed perf baseline tracking round ms, wire
+bytes per round and the HBM-pass estimate of the fused engine from PR 1
+on, promoted exclusively by ``benchmarks/run.py`` (single-writer rule).
 """
 from __future__ import annotations
 
@@ -120,7 +121,8 @@ def run(steps: int = 6) -> list[dict]:
         f_ms = bench["rounds"]["fused_none"]["round_ms"]
         u_ms = bench["rounds"]["unfused_none"]["round_ms"]
         bench["fused_vs_unfused"] = round(f_ms / max(u_ms, 1e-9), 3)
-        path = write_json("BENCH_consensus.json", bench, repo_root=True)
+        # results/ only — run.py promotes to the committed root baseline
+        path = write_json("BENCH_consensus.json", bench)
         print(f"wrote {path} (fused/unfused = {bench['fused_vs_unfused']})")
     write_csv("consensus_overhead.csv", rows)
     return rows

@@ -2,6 +2,12 @@
 
 Prints a ``name,value,derived`` CSV summary at the end. Full sweeps:
 ``python -m benchmarks.run --full``.
+
+Output layout (single-writer rule, see ``benchmarks/common.py``): every
+benchmark module writes only under ``benchmarks/results/``; THIS driver is
+the sole writer of the committed repo-root ``BENCH_*.json`` baselines — it
+promotes a cell's results artifact after the cell succeeds on the full
+grid (``--full``), so smoke/CI runs can never clobber a baseline.
 """
 from __future__ import annotations
 
@@ -16,7 +22,8 @@ def main(argv=None) -> None:
                     help="paper-scale sweeps (20 seeds etc.)")
     ap.add_argument("--only", default="all",
                     choices=["all", "fig2", "fig3", "hopkins", "roofline",
-                             "consensus", "lm_ablation", "topology"])
+                             "consensus", "lm_ablation", "topology",
+                             "async"])
     args = ap.parse_args(argv)
     seeds = 20 if args.full else 3
 
@@ -24,6 +31,15 @@ def main(argv=None) -> None:
 
     def record(name, value, derived=""):
         summary.append((name, value, derived))
+
+    def promote(name):
+        # single-writer rule: only this driver touches root baselines,
+        # and only when the full grid ran
+        if args.full:
+            from benchmarks.common import promote_baseline
+            path = promote_baseline(name)
+            if path:
+                record(f"promoted_{name}", path)
 
     if args.only in ("all", "fig2"):
         from benchmarks import fig2_synthetic
@@ -101,6 +117,7 @@ def main(argv=None) -> None:
                             record("consensus_H16_wire_vs_allreduce",
                                    r["vs_allreduce"],
                                    "cross-pod bytes ratio")
+            promote("BENCH_consensus.json")
         else:
             record("consensus_bench", "FAILED",
                    proc.stderr.strip().splitlines()[-1][:80]
@@ -120,6 +137,40 @@ def main(argv=None) -> None:
                        f"iters={b['iters_median']:.0f} (vs static "
                        f"{by[(topo, 'static')]['iters_median']:.0f})")
         record("topology_wall_s", round(time.time() - t0, 1))
+        promote("BENCH_topology.json")
+
+    if args.only in ("all", "async"):
+        # own subprocess: needs the 8-device env like the consensus cell
+        import os
+        import subprocess
+        env = dict(os.environ)
+        env.setdefault("XLA_FLAGS",
+                       "--xla_force_host_platform_device_count=8")
+        cmd = [sys.executable, "-m", "benchmarks.async_staleness"]
+        if not args.full:
+            cmd.append("--smoke")
+        proc = subprocess.run(cmd, capture_output=True, text=True, env=env,
+                              timeout=1800)
+        print(proc.stdout, end="")
+        if proc.returncode == 0:
+            import json
+            path = os.path.join(os.path.dirname(__file__), "results",
+                                "BENCH_async.json")
+            if os.path.exists(path):
+                with open(path) as f:
+                    bench = json.load(f)
+                for r in bench["rows"]:
+                    record(f"async_speedup_wire{r['wire_frac']}",
+                           r["speedup"],
+                           f"sync={r['rounds_sync']}r "
+                           f"async={r['ticks_async']}t")
+                record("async_objective_drift", bench["objective_drift"],
+                       "|f_async - f_sync| / f_sync")
+            promote("BENCH_async.json")
+        else:
+            record("async_bench", "FAILED",
+                   proc.stderr.strip().splitlines()[-1][:80]
+                   if proc.stderr.strip() else "no stderr")
 
     if args.only in ("all", "lm_ablation"):
         import os

@@ -9,9 +9,10 @@ engine (NAP penalties) on the synthetic least-squares problem and records
   * mean active-edge fraction over the run and the final fraction after
     100 post-convergence epochs (the budget scheduler's §4 shedding).
 
-Writes ``BENCH_topology.json`` at the repo root (the committed baseline,
-like BENCH_consensus.json) plus the usual results CSV. ``--smoke`` runs a
-reduced grid for CI.
+Writes ``BENCH_topology.json`` under ``benchmarks/results/`` plus the
+usual results CSV; ``benchmarks/run.py --full`` promotes it to the
+repo-root committed baseline (single-writer rule, see
+``benchmarks/common.py``). ``--smoke`` runs a reduced grid for CI.
 """
 from __future__ import annotations
 
@@ -97,11 +98,10 @@ def run(*, smoke: bool = False, j: int = 12, seeds: int = 3,
                   f"err={np.median(errs):.4f} "
                   f"active_final={np.median(final_active):.2f}", flush=True)
     write_csv("topology_dynamics.csv", rows)
-    # the repo-root file is the COMMITTED baseline — smoke runs (CI) must
-    # not clobber it with the reduced grid; they write to results/ instead
+    # results/ only — run.py promotes full-grid runs to the committed
+    # repo-root baseline (benchmarks/common.py single-writer rule)
     write_json("BENCH_topology.json",
-               {"j": j, "rel_tol": 1e-3, "smoke": smoke, "rows": rows},
-               repo_root=not smoke)
+               {"j": j, "rel_tol": 1e-3, "smoke": smoke, "rows": rows})
     return rows
 
 

@@ -1,0 +1,17 @@
+"""Bounded-staleness async consensus executor.
+
+See ``docs/async_executor.md`` for the staleness model, its invariants and
+the knobs. The traced round itself lives on the trainer
+(``repro.optim.ConsensusTrainer.consensus_step_async``); this package owns
+the wire ledger, the event clock and the host driver.
+"""
+from repro.async_exec.clock import RoundClock, straggler_compute
+from repro.async_exec.executor import AsyncExecutor
+from repro.async_exec.ledger import (AsyncConfig, WireLedger,
+                                     init_wire_ledger, wire_row_dtype,
+                                     wire_width)
+
+__all__ = [
+    "AsyncConfig", "AsyncExecutor", "RoundClock", "WireLedger",
+    "init_wire_ledger", "straggler_compute", "wire_row_dtype", "wire_width",
+]

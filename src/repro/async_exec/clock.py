@@ -1,0 +1,112 @@
+"""Discrete-event round clock for the bounded-staleness executor.
+
+The numerics of an async round are exact (stale payloads really feed the
+fused update); what a single-process simulation cannot produce is the
+*wall-clock* of a fleet with heterogeneous node speeds. ``RoundClock``
+supplies it: a deterministic event model of J nodes, each taking
+``compute_s[i]`` seconds per consensus round (H local steps + the fused
+update) and ``wire_s`` seconds for a payload to cross the DCN.
+
+One ``tick()`` advances global time by the fastest node's round time and
+reports, for that fleet tick,
+
+  * ``advance`` [J]  — which nodes completed a round in this tick (a 2x
+    slow node advances every other tick);
+  * ``arrivals`` [deg, J] — which directed edges' payloads landed fresh
+    since the receiver's last read (most-recent-wins slots: a sender's
+    newest landed payload supersedes older unread ones).
+
+Timing model (stated, not hidden):
+
+  * async — permutes are double-buffered behind compute, so a node's round
+    time is its compute time alone; a payload sent at a round's end lands
+    ``wire_s`` later. Fleet wall-clock = ticks x min(compute_s): nobody
+    barriers, the slow node just lands fewer sends.
+  * sync — every round barriers on the slowest node AND serializes the
+    exchange behind compute: ``sync_round_s = max(compute_s) + wire_s``.
+
+These are the same modeling conventions as ``launch.dryrun
+.fused_round_roofline`` (analytic wire/HBM accounting next to measured
+numerics); ``benchmarks/async_staleness.py`` derives ``wire_s`` from
+``FlatLayout.wire_bytes`` over a stated DCN bandwidth.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import numpy as np
+
+
+@dataclasses.dataclass
+class RoundClock:
+    """Event clock for one fleet. Mutable: ``tick()`` advances it."""
+
+    compute_s: np.ndarray          # [J] per-node seconds per round
+    wire_s: float                  # DCN latency of one payload
+    offsets: tuple                 # the engine's compiled offset schedule
+
+    def __post_init__(self):
+        self.compute_s = np.asarray(self.compute_s, dtype=float)
+        j = self.num_nodes
+        if (self.compute_s <= 0).any():
+            raise ValueError("compute_s must be positive")
+        self.time_s = 0.0
+        self.ticks = 0
+        self.rounds_done = np.zeros(j, dtype=int)
+        self.next_done = self.compute_s.copy()      # first completion times
+        # last send id consumed per (receiver, sender); the initial params
+        # count as send id 0, landed at t=0, unread (-1) => first read of
+        # every edge is fresh, so the zero-filled ledger is never consumed
+        self.last_read = np.full((j, j), -1, dtype=int)
+
+    @property
+    def num_nodes(self) -> int:
+        return int(self.compute_s.shape[0])
+
+    @property
+    def tick_s(self) -> float:
+        """Async fleet tick: the fastest node's round time."""
+        return float(self.compute_s.min())
+
+    @property
+    def sync_round_s(self) -> float:
+        """Synchronous round: barrier on the slowest node + the exchange."""
+        return float(self.compute_s.max()) + float(self.wire_s)
+
+    def _latest_landed(self, t: float) -> np.ndarray:
+        """[J] newest send id of each node landed at receivers by time t.
+
+        Send id k (the node's k-th completed round) lands at
+        ``k * compute_s + wire_s``; id 0 (initial params) lands at 0.
+        """
+        k = np.floor((t - self.wire_s) / self.compute_s).astype(int)
+        return np.maximum(k, 0)
+
+    def tick(self) -> tuple[np.ndarray, np.ndarray]:
+        """Advance one fleet tick -> (arrivals [deg, J], advance [J])."""
+        j = self.num_nodes
+        self.time_s += self.tick_s
+        self.ticks += 1
+        eps = 1e-9 * max(self.tick_s, 1.0)
+        advance = self.next_done <= self.time_s + eps
+        self.rounds_done[advance] += 1
+        self.next_done[advance] += self.compute_s[advance]
+
+        landed = self._latest_landed(self.time_s)
+        arrivals = np.zeros((max(len(self.offsets), 1), j), dtype=bool)
+        idx = np.arange(j)
+        for d, off in enumerate(self.offsets):
+            senders = (idx + off) % j
+            fresh = advance & (landed[senders] > self.last_read[idx, senders])
+            arrivals[d] = fresh
+            self.last_read[idx[fresh], senders[fresh]] = landed[
+                senders[fresh]]
+        return arrivals, advance
+
+
+def straggler_compute(num_nodes: int, *, base_s: float = 1.0,
+                      victim: int = 0, factor: float = 2.0) -> np.ndarray:
+    """[J] per-node round times with one slow node (the benchmark's 2x)."""
+    c = np.full(num_nodes, base_s, dtype=float)
+    c[victim] = base_s * factor
+    return c

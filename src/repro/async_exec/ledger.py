@@ -1,0 +1,95 @@
+"""In-flight wire state for the bounded-staleness consensus executor.
+
+The synchronous engine's exchange is fire-and-consume: every graph offset's
+collective-permute must land before the fused round runs. The async
+executor instead keeps a **wire ledger** — a double buffer of the last
+payload successfully consumed per directed edge — so round k's prox/dual
+work can proceed on whatever has arrived while round k's permutes are still
+in flight. The buffer discipline is most-recent-wins (each sender
+overwrites its slot with its latest parameters; a receiver that missed a
+round reads the newest complete slot, never a queue of old ones), which is
+exactly what a double-buffered RDMA mailbox implements on real hardware.
+
+The ledger stores the RAW wire rows (`[deg, J, W]`, the same bytes the
+permute moves — int8 payloads keep their bitcast scale tail in-band), so
+holding a stale payload costs zero recompute: `FlatLayout.decode_split`
+peels payload and scales at consumption time, same as the fresh path.
+
+Staleness accounting does NOT live here: the per-edge clocks are
+``topology.TopologyState.age`` (the topology runtime is the single owner of
+per-edge state — gates, epochs, clocks, pending kicks). The ledger is only
+the payload buffer those clocks describe.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass(frozen=True)
+class AsyncConfig:
+    """Knobs for the bounded-staleness executor.
+
+    Attributes:
+      max_staleness: how many consensus rounds old a consumed payload may
+        be. 0 = wait for everything: the async step degenerates to the
+        synchronous round (pinned bit-identical by test). N >= 1 lets a
+        node proceed on payloads up to N rounds old; an edge whose payload
+        ages past N is temporarily gated (zero math, zero-kick absorbed)
+        until a fresh payload lands.
+      stale_gamma: staleness damping strength — a stale edge's applied
+        penalty is eta / (1 + gamma * age) (``core.penalty
+        .staleness_damping``), so duals built against old neighbor
+        estimates do not over-penalize. 0 disables damping.
+    """
+
+    max_staleness: int = 1
+    stale_gamma: float = 0.5
+
+    def __post_init__(self):
+        if self.max_staleness < 0:
+            raise ValueError(f"max_staleness {self.max_staleness} < 0")
+        if self.stale_gamma < 0.0:
+            raise ValueError(f"stale_gamma {self.stale_gamma} < 0")
+
+
+class WireLedger(NamedTuple):
+    """Traced double-buffer of last-consumed wire rows.
+
+    ``w_prev`` rides along: the symmetrized, staleness-damped penalty
+    weight each edge actually applied LAST round. When an edge ages past
+    the bound, its zero-kick absorption must remove exactly the force it
+    was applying — the penalty state has already advanced one update by
+    then, so the applied weight is snapshotted here instead of recomputed.
+    """
+
+    wires: jax.Array   # [deg, J, W] — raw wire rows, one per graph offset
+    round: jax.Array   # []  int32  — async rounds completed
+    w_prev: jax.Array  # [J, J] f32 — weights applied last round
+
+
+def wire_width(layout, compression: str) -> int:
+    """Elements per wire row (int8 payloads carry the scale tail)."""
+    if compression == "int8":
+        return layout.total + 4 * layout.num_leaves
+    return layout.total
+
+
+def wire_row_dtype(layout, compression: str):
+    return jnp.int8 if compression == "int8" else layout.wire_dtype
+
+
+def init_wire_ledger(layout, deg: int, num_nodes: int,
+                     compression: str) -> WireLedger:
+    """Zero-filled ledger; the executor guarantees the first read of every
+    edge is fresh (the clock marks a node's initial parameters as a landed
+    round -1 send), so the zeros are never consumed."""
+    w = wire_width(layout, compression)
+    return WireLedger(
+        wires=jnp.zeros((max(deg, 1), num_nodes, w),
+                        wire_row_dtype(layout, compression)),
+        round=jnp.zeros((), jnp.int32),
+        w_prev=jnp.zeros((num_nodes, num_nodes), jnp.float32))

@@ -252,10 +252,39 @@ def update_penalty(cfg: PenaltyConfig, state: PenaltyState, *,
                         n_incr=n_incr, f_prev=f_prev, t=t + 1)
 
 
+def staleness_damping(age: jax.Array, gamma: float) -> jax.Array:
+    """Per-edge damping factor 1 / (1 + gamma * age) for stale consensus.
+
+    The async executor's dual for a stale edge was built against a
+    neighbor estimate ``age`` rounds old; applying the full adaptive eta to
+    it over-penalizes disagreement that the neighbor may already have
+    resolved (the explicit-rate analysis of inexact consensus bounds the
+    error as O(staleness) — damping the pull by the same factor keeps the
+    effective step inside that bound). ``age`` should be the SYMMETRIZED
+    clock (``topology.state.sym_age``) so the damped weights stay symmetric
+    and the ``sum_i lam_i = 0`` invariant survives. ``age == 0`` returns
+    exactly 1.0 — fresh edges are bit-identically undamped.
+    """
+    a = age.astype(jnp.float32)
+    return 1.0 / (1.0 + jnp.asarray(gamma, jnp.float32) * a)
+
+
 def effective_eta(cfg: PenaltyConfig, state: PenaltyState,
-                  adj: jax.Array) -> jax.Array:
-    """eta actually applied to edge (i, j) this iteration, zero on non-edges."""
-    return jnp.where(adj.astype(bool), state.eta, 0.0)
+                  adj: jax.Array, *, age: jax.Array | None = None,
+                  stale_gamma: float = 0.5) -> jax.Array:
+    """eta actually applied to edge (i, j) this iteration, zero on non-edges.
+
+    With ``age`` (the [J, J] staleness clocks), the applied penalty is
+    additionally damped by ``staleness_damping`` — the async executor's
+    view of the schedule. A fully-gated edge (adj False) contributes 0
+    regardless of its adaptation state; a just-revived edge re-enters at
+    its adapted eta (the schedule kept updating it while gated — see
+    ``update_penalty``'s ``adj_pen`` composition in the engines).
+    """
+    eta = jnp.where(adj.astype(bool), state.eta, 0.0)
+    if age is not None:
+        eta = eta * staleness_damping(age, stale_gamma)
+    return eta
 
 
 def budget_exhausted(state: PenaltyState) -> jax.Array:

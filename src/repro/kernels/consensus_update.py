@@ -36,6 +36,19 @@ static 1/deg, so a gated edge contributes exactly zero math. The ungated
 path is byte-for-byte the PR 1 kernel — ``scheduler="static"`` stays
 bit-identical by construction.
 
+Zero-kick gating (``kick_w`` supplied, masked variants only): when the
+scheduler gates an edge, its final consensus force ``w_ij (theta_i -
+theta_j)`` is absorbed into the dual — one extra dual-ascent step
+restricted to the newly-gated edges — so removing the edge leaves every
+node's augmented stationarity unchanged at the current iterate.
+``kick_w[d, i]`` is the symmetrized penalty weight of the newly-gated edge
+(zero elsewhere); ``theta_j`` is the edge's wire payload in the same call
+(the engine delays scheduler kicks one round so the payload is on the
+wire; the async executor kicks staleness-gated edges in-round from its
+ledger). The kick term is compiled only when the scheduler can gate
+(``TopologyConfig.can_gate``): a lam + 0.0 would flip -0.0 bits and break
+the static-path bit-identity pin.
+
 SMEM footprint note: the block->leaf table costs 4 bytes per block — pick
 ``block_size`` >= 64k at LM scale so a multi-billion-parameter vector keeps
 the table in the tens of KB.
@@ -199,10 +212,15 @@ def _row_kernel(deg, block_size, block_leaf_ref, node_ref, esym_ref,
     ssq_out[0, 0] = (eta_node * eta_node) * blocksum(dbar * dbar)
 
 
-def _round_kernel_masked(deg, block_leaf_ref, node_ref, esym_ref, barw_ref,
-                         scale_ref, theta_ref, lam_ref, barp_ref, wires_ref,
-                         theta_out, lam_out, bar_out, rsq_out, ssq_out):
+def _round_kernel_masked(deg, has_kick, block_leaf_ref, node_ref, esym_ref,
+                         barw_ref, *refs):
     """Edge-gated variant of ``_round_kernel`` (see module docstring)."""
+    if has_kick:
+        (kick_ref, scale_ref, theta_ref, lam_ref, barp_ref, wires_ref,
+         theta_out, lam_out, bar_out, rsq_out, ssq_out) = refs
+    else:
+        (scale_ref, theta_ref, lam_ref, barp_ref, wires_ref,
+         theta_out, lam_out, bar_out, rsq_out, ssq_out) = refs
     b = pl.program_id(1)
     li = block_leaf_ref[b]
     alpha = node_ref[0, 0]
@@ -216,15 +234,24 @@ def _round_kernel_masked(deg, block_leaf_ref, node_ref, esym_ref, barw_ref,
 
     nbr_w = jnp.zeros_like(theta)
     nbr_p = jnp.zeros_like(theta)
+    kick_x = jnp.zeros_like(theta)
+    ksum = jnp.float32(0.0)
     for d in range(deg):                      # static unroll over offsets
         x = wires_ref[d, 0, :].astype(jnp.float32) * scale_ref[d, 0, li]
         nbr_w = nbr_w + esym_ref[d, 0] * x
         nbr_p = nbr_p + barw_ref[d, 0] * x
+        if has_kick:
+            kick_x = kick_x + kick_ref[d, 0] * x
+            ksum = ksum + kick_ref[d, 0]
     bar = nbr_p * inv_deg
     nbr = nbr_w / jnp.maximum(eta_sum, 1e-12)
 
     theta_new = theta - alpha * (2.0 * lam + eta_sum * (theta - nbr))
     lam_new = lam + 0.5 * eta_sum * (theta_new - nbr)
+    if has_kick:
+        # zero-kick: absorb newly-gated edges' final consensus force
+        # 0.5 sum_d kick_d (theta - x_d) into the dual (round-start iterate)
+        lam_new = lam_new + 0.5 * (ksum * theta - kick_x)
     theta_out[0, :] = theta_new.astype(theta_out.dtype)
     lam_out[0, :] = lam_new.astype(lam_out.dtype)
     bar_out[0, :] = bar.astype(bar_out.dtype)
@@ -233,11 +260,15 @@ def _round_kernel_masked(deg, block_leaf_ref, node_ref, esym_ref, barw_ref,
     ssq_out[0, 0] = (eta_node * eta_node) * jnp.sum(dbar * dbar)
 
 
-def _row_kernel_masked(deg, block_size, block_leaf_ref, node_ref, esym_ref,
-                       barw_ref, scale_ref, theta_ref, lam_ref, barp_ref,
-                       wires_ref, theta_out, lam_out, bar_out, rsq_out,
-                       ssq_out):
+def _row_kernel_masked(deg, block_size, has_kick, block_leaf_ref, node_ref,
+                       esym_ref, barw_ref, *refs):
     """Edge-gated variant of ``_row_kernel`` (whole-row interpret tiling)."""
+    if has_kick:
+        (kick_ref, scale_ref, theta_ref, lam_ref, barp_ref, wires_ref,
+         theta_out, lam_out, bar_out, rsq_out, ssq_out) = refs
+    else:
+        (scale_ref, theta_ref, lam_ref, barp_ref, wires_ref,
+         theta_out, lam_out, bar_out, rsq_out, ssq_out) = refs
     alpha = node_ref[0, 0]
     eta_sum = node_ref[1, 0]
     eta_node = node_ref[2, 0]
@@ -249,17 +280,24 @@ def _row_kernel_masked(deg, block_size, block_leaf_ref, node_ref, esym_ref,
     bl = block_leaf_ref[...]
     nbr_w = jnp.zeros_like(theta)
     nbr_p = jnp.zeros_like(theta)
+    kick_x = jnp.zeros_like(theta)
+    ksum = jnp.float32(0.0)
     for d in range(deg):
         scale_vec = jnp.repeat(scale_ref[d, 0, :][bl], block_size,
                                total_repeat_length=theta.shape[0])
         x = wires_ref[d, 0, :].astype(jnp.float32) * scale_vec
         nbr_w = nbr_w + esym_ref[d, 0] * x
         nbr_p = nbr_p + barw_ref[d, 0] * x
+        if has_kick:
+            kick_x = kick_x + kick_ref[d, 0] * x
+            ksum = ksum + kick_ref[d, 0]
     bar = nbr_p * inv_deg
     nbr = nbr_w / jnp.maximum(eta_sum, 1e-12)
 
     theta_new = theta - alpha * (2.0 * lam + eta_sum * (theta - nbr))
     lam_new = lam + 0.5 * eta_sum * (theta_new - nbr)
+    if has_kick:
+        lam_new = lam_new + 0.5 * (ksum * theta - kick_x)
     theta_out[0, :] = theta_new.astype(theta_out.dtype)
     lam_out[0, :] = lam_new.astype(lam_out.dtype)
     bar_out[0, :] = bar.astype(bar_out.dtype)
@@ -273,7 +311,8 @@ def _row_kernel_masked(deg, block_size, block_leaf_ref, node_ref, esym_ref,
 
 
 def _row_round(theta, lam, bar_prev, wires, scales, e_sym, node_scalars,
-               block_leaf_arr, *, block_size, interpret, bar_w=None):
+               block_leaf_arr, *, block_size, interpret, bar_w=None,
+               kick_w=None):
     j, total = theta.shape
     deg = wires.shape[0]
     masked = bar_w is not None
@@ -291,6 +330,10 @@ def _row_round(theta, lam, bar_prev, wires, scales, e_sym, node_scalars,
         in_specs.append(pl.BlockSpec((deg, 1), lambda i: (0, i),
                                      memory_space=pltpu.SMEM))
         args.append(bar_w.astype(jnp.float32))
+    if kick_w is not None:
+        in_specs.append(pl.BlockSpec((deg, 1), lambda i: (0, i),
+                                     memory_space=pltpu.SMEM))
+        args.append(kick_w.astype(jnp.float32))
     in_specs += [
         pl.BlockSpec((deg, 1, scales.shape[-1]), lambda i: (0, i, 0),
                      memory_space=pltpu.SMEM),
@@ -299,9 +342,11 @@ def _row_round(theta, lam, bar_prev, wires, scales, e_sym, node_scalars,
     ]
     args += [scales.astype(jnp.float32), theta, lam, bar_prev, wires]
     alias_base = len(in_specs) - 4                    # position of theta
-    kernel = (_row_kernel_masked if masked else _row_kernel)
+    kernel = (functools.partial(_row_kernel_masked, deg, block_size,
+                                kick_w is not None) if masked
+              else functools.partial(_row_kernel, deg, block_size))
     return pl.pallas_call(
-        functools.partial(kernel, deg, block_size),
+        kernel,
         grid=(j,),
         in_specs=in_specs,
         out_specs=[vec, vec, vec,
@@ -327,7 +372,7 @@ def consensus_round(theta, lam, bar_prev, wires, scales, e_sym,
                     block_leaf: tuple[int, ...], block_size: int,
                     interpret: bool = True,
                     whole_rows: bool | None = None,
-                    bar_w=None, inv_deg=None):
+                    bar_w=None, inv_deg=None, kick_w=None):
     """Whole-round fused kernel over the flat buffer.
 
     Args:
@@ -346,6 +391,11 @@ def consensus_round(theta, lam, bar_prev, wires, scales, e_sym,
       inv_deg: optional [J] f32, 1 / active degree (0 for isolated/ghost
         nodes). Must be supplied together with ``bar_w``; both None selects
         the ungated PR 1 kernel (byte-identical math).
+      kick_w: optional [deg, J] f32 zero-kick weights (masked variants
+        only): the dual additionally absorbs
+        ``0.5 * sum_d kick_w[d] * (theta - dequant(wire[d]))`` — the final
+        consensus force of edges gated since the last round. Passing None
+        compiles the kick-free kernel (bit-identical to PR 2).
 
     Returns (theta_new [J, total], lam_new [J, total], bar [J, total] f32,
              r_sq [J], s_sq [J]).
@@ -365,6 +415,7 @@ def consensus_round(theta, lam, bar_prev, wires, scales, e_sym,
     assert len(block_leaf) == nblocks, (len(block_leaf), nblocks)
     masked = bar_w is not None
     assert masked == (inv_deg is not None), "bar_w and inv_deg travel together"
+    assert kick_w is None or masked, "kick_w needs the masked kernel"
 
     rows = [jnp.asarray(alpha, jnp.float32),
             jnp.asarray(eta_sum, jnp.float32),
@@ -378,7 +429,7 @@ def consensus_round(theta, lam, bar_prev, wires, scales, e_sym,
         tn, ln, bar, rsq, ssq = _row_round(
             theta, lam, bar_prev, wires, scales, e_sym, node_scalars,
             block_leaf_arr, block_size=block_size, interpret=interpret,
-            bar_w=bar_w)
+            bar_w=bar_w, kick_w=kick_w)
         return tn, ln, bar, rsq[:, 0], ssq[:, 0]
 
     smem = pl.BlockSpec(memory_space=pltpu.SMEM)
@@ -399,6 +450,10 @@ def consensus_round(theta, lam, bar_prev, wires, scales, e_sym,
         in_specs.append(pl.BlockSpec((deg, 1), lambda i, b: (0, i),
                                      memory_space=pltpu.SMEM))  # edge gates
         args.append(bar_w.astype(jnp.float32))
+    if kick_w is not None:
+        in_specs.append(pl.BlockSpec((deg, 1), lambda i, b: (0, i),
+                                     memory_space=pltpu.SMEM))  # zero-kick
+        args.append(kick_w.astype(jnp.float32))
     in_specs += [
         pl.BlockSpec((deg, 1, scales.shape[-1]), lambda i, b: (0, i, 0),
                      memory_space=pltpu.SMEM),        # dequant scales
@@ -408,9 +463,11 @@ def consensus_round(theta, lam, bar_prev, wires, scales, e_sym,
     args += [scales.astype(jnp.float32), theta, lam, bar_prev, wires]
     ab = len(in_specs) - 4                            # position of theta
 
+    kernel = (functools.partial(_round_kernel_masked, deg,
+                                kick_w is not None) if masked
+              else functools.partial(_round_kernel, deg))
     theta_new, lam_new, bar, rsq, ssq = pl.pallas_call(
-        functools.partial(_round_kernel_masked if masked else _round_kernel,
-                          deg),
+        kernel,
         grid=(j, nblocks),
         in_specs=in_specs,
         out_specs=[vec, vec, vec, part, part],

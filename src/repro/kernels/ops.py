@@ -72,10 +72,11 @@ def consensus_update(theta, lam, nbr_avg, theta_bar, theta_bar_prev, *,
 def consensus_round(theta, lam, bar_prev, wires, scales, e_sym,
                     alpha, eta_sum, eta_node, *, block_leaf, block_size,
                     whole_rows: bool | None = None,
-                    bar_w=None, inv_deg=None):
+                    bar_w=None, inv_deg=None, kick_w=None):
     """Whole-round fused flat-buffer kernel (see consensus_update module).
 
-    ``bar_w``/``inv_deg`` select the edge-gated dynamic-topology variant.
+    ``bar_w``/``inv_deg`` select the edge-gated dynamic-topology variant;
+    ``kick_w`` additionally compiles the zero-kick dual absorption.
     """
     return _cu.consensus_round(theta, lam, bar_prev, wires, scales, e_sym,
                                alpha, eta_sum, eta_node,
@@ -83,4 +84,4 @@ def consensus_round(theta, lam, bar_prev, wires, scales, e_sym,
                                block_size=block_size,
                                interpret=interpret_mode(),
                                whole_rows=whole_rows,
-                               bar_w=bar_w, inv_deg=inv_deg)
+                               bar_w=bar_w, inv_deg=inv_deg, kick_w=kick_w)

@@ -51,13 +51,14 @@ def rwkv6_scan_ref(r, k, v, log_w, u, s0):
 def consensus_round_ref(theta, lam, bar_prev, wires, scales, e_sym,
                         alpha, eta_sum, eta_node, *,
                         block_leaf, block_size: int,
-                        bar_w=None, inv_deg=None):
+                        bar_w=None, inv_deg=None, kick_w=None):
     """Whole-round flat-buffer oracle (see consensus_update.consensus_round).
 
     Reductions are evaluated blockwise in the kernel's order so the fused
     and reference paths agree to float32 round-off, not just statistically.
     ``bar_w``/``inv_deg`` mirror the kernel's dynamic-topology edge gating
-    (both None = the ungated PR 1 math).
+    (both None = the ungated PR 1 math); ``kick_w`` mirrors its zero-kick
+    dual absorption for newly-gated edges.
     """
     j, total = theta.shape
     deg = wires.shape[0]
@@ -82,6 +83,11 @@ def consensus_round_ref(theta, lam, bar_prev, wires, scales, e_sym,
     theta_new = theta32 - alpha * (2.0 * lam32
                                    + eta_sum[:, None] * (theta32 - nbr))
     lam_new = lam32 + 0.5 * eta_sum[:, None] * (theta_new - nbr)
+    if kick_w is not None:
+        assert bar_w is not None, "kick_w needs the masked variant"
+        k = kick_w.astype(jnp.float32)                 # [deg, J]
+        kick_x = (k[..., None] * x).sum(axis=0)
+        lam_new = lam_new + 0.5 * (k.sum(axis=0)[:, None] * theta32 - kick_x)
 
     def blocksum(v):
         return v.reshape(j, -1, block_size).sum(axis=-1).sum(axis=-1)

@@ -19,6 +19,8 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.async_exec import (AsyncConfig, AsyncExecutor, RoundClock,
+                              straggler_compute)
 from repro.checkpoint import latest_steps, restore, save_async, wait_pending
 from repro.configs import get_config, get_reduced_config
 from repro.core.penalty import PenaltyConfig, SCHEMES
@@ -28,7 +30,7 @@ from repro.models import build_model
 from repro.optim import ConsensusConfig, ConsensusTrainer
 from repro.optim.adamw import AdamWConfig
 from repro.runtime import (ElasticController, RetryPolicy, StragglerMonitor,
-                           with_retries)
+                           aged_out_nodes, with_retries)
 from repro.topology import SCHEDULERS as TOPO_SCHEDULERS, TopologyConfig
 
 
@@ -56,7 +58,19 @@ def parse_args(argv=None):
                          "STEP (debug-mesh churn drill; implies --topo-churn)")
     ap.add_argument("--drop-stragglers", action="store_true",
                     help="ghost a flagged straggler pod via the topology "
-                         "runtime instead of just logging it")
+                         "runtime instead of just logging it (async mode "
+                         "flags by edge age, sync mode by wall-clock EMA)")
+    ap.add_argument("--async", dest="async_mode", action="store_true",
+                    help="bounded-staleness executor (repro.async_exec): "
+                         "consensus rounds consume the freshest LANDED "
+                         "payload per edge instead of barriering")
+    ap.add_argument("--max-staleness", type=int, default=2,
+                    help="async: rounds a consumed payload may lag; older "
+                         "edges gate until a fresh payload lands (0 = "
+                         "wait for everything, bit-identical to sync)")
+    ap.add_argument("--slow-node", default="",
+                    help="async drill: NODE:FACTOR — model pod NODE taking "
+                         "FACTOR x the fleet round time (e.g. 0:2.0)")
     ap.add_argument("--local-steps", type=int, default=4)
     ap.add_argument("--eta0", type=float, default=0.1)
     ap.add_argument("--lr", type=float, default=1e-2)
@@ -83,6 +97,11 @@ def main(argv=None):
     if args.drop_node:
         drop_at, drop_victim = (int(x) for x in args.drop_node.split(":"))
     churn = args.topo_churn or args.drop_stragglers or drop_at >= 0
+    topo_sched = args.topo_scheduler
+    if args.async_mode and topo_sched == "static" and args.max_staleness > 0:
+        # the stale scheduler mirrors the executor's in-round gating into
+        # the topology mask (monitoring + wire accounting see it)
+        topo_sched = "stale"
     trainer = ConsensusTrainer(
         model, mesh,
         adamw=AdamWConfig(lr=args.lr),
@@ -90,8 +109,10 @@ def main(argv=None):
             penalty=PenaltyConfig(scheme=args.scheme, eta0=args.eta0),
             topology=args.topology, local_steps=args.local_steps,
             compression=args.compression,
-            dyn_topology=TopologyConfig(scheduler=args.topo_scheduler,
-                                        churn=churn)))
+            dyn_topology=TopologyConfig(scheduler=topo_sched, churn=churn,
+                                        max_staleness=args.max_staleness),
+            async_exec=(AsyncConfig(max_staleness=args.max_staleness)
+                        if args.async_mode else None)))
     state = trainer.init_state(jax.random.PRNGKey(args.seed))
     start_step = 0
     if args.ckpt_dir and latest_steps(args.ckpt_dir):
@@ -108,6 +129,16 @@ def main(argv=None):
     # state buffers; the consensus round is never retried, so donate there.
     train = jax.jit(trainer.train_step)
     _, cons = trainer.jit_step_fns()
+    executor = None
+    if args.async_mode and trainer.num_nodes > 1:
+        compute = np.ones(trainer.num_nodes)
+        if args.slow_node:
+            v, f = args.slow_node.split(":")
+            compute = straggler_compute(trainer.num_nodes, victim=int(v),
+                                        factor=float(f))
+        executor = AsyncExecutor(trainer, RoundClock(
+            compute_s=compute, wire_s=0.25,
+            offsets=tuple(trainer.offsets)))
     monitor = StragglerMonitor(trainer.num_nodes)
     elastic = ElasticController(trainer.graph, topology=trainer.topo_rt)
     step_fn = with_retries(lambda s, b: train(s, b), RetryPolicy())
@@ -127,18 +158,35 @@ def main(argv=None):
         slow = monitor.observe(np.full(trainer.num_nodes, dt))
         line = f"step {step:5d} loss {float(m['loss']):.4f} {dt*1e3:.0f}ms"
         if trainer.should_sync(step):
-            state, cm = cons(state, make_batch(10**6 + step))
+            probe = make_batch(10**6 + step)
+            if executor is not None:
+                state, cm = executor.consensus_round(state, probe)
+            else:
+                state, cm = cons(state, probe)
             line += (f" | consensus r={float(cm['r_max']):.4f} "
                      f"eta={float(cm['eta_mean']):.4f}")
             if trainer.dynamic:
                 line += f" active={float(cm['active_edges']):.2f}"
+            if executor is not None and "stale_edges" in cm:
+                line += (f" stale={float(cm['stale_edges']):.2f}"
+                         f" age_max={int(cm['age_max'])}")
+            if executor is not None and args.drop_stragglers:
+                # async unification: the staleness clocks ARE the
+                # straggler signal — wall-clock EMA not needed
+                for v in aged_out_nodes(
+                        state.topo, max_staleness=args.max_staleness):
+                    alive = np.asarray(state.topo.node_alive)
+                    if alive[v] and alive.sum() > 2:
+                        state = state._replace(topo=elastic.drop_preserving(
+                            v, state.topo, step))
+                        line += f" | ghosted aged-out node {v}"
         if step == drop_at:
             # layout-preserving churn drill: ghost the victim, keep going —
             # same compiled step fns, no restart (a topology epoch)
             state = state._replace(topo=elastic.drop_preserving(
                 drop_victim, state.topo, step))
             line += f" | dropped node {drop_victim} (topology epoch)"
-        if slow:
+        if slow and executor is None:
             line += f" | stragglers: {slow}"
             if args.drop_stragglers and trainer.dynamic:
                 for v in slow:
@@ -159,6 +207,8 @@ def main(argv=None):
     wait_pending()
     print(f"done: {args.steps - start_step} steps in "
           f"{time.time() - t_start:.1f}s")
+    if executor is not None:
+        print(f"async executor: {executor.summary()}")
     return 0
 
 

@@ -36,8 +36,9 @@ import jax.numpy as jnp
 import numpy as np
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
+from repro.async_exec.ledger import AsyncConfig, WireLedger, init_wire_ledger
 from repro.core.graph import Graph, build_graph
-from repro.core.penalty import (PenaltyConfig, PenaltyState,
+from repro.core.penalty import (PenaltyConfig, PenaltyState, effective_eta,
                                 init_penalty_state, update_penalty)
 from repro.models.model import Model, arch_rules
 from repro.distributed import sharding as shd
@@ -45,7 +46,8 @@ from repro.kernels import ref as kref
 from repro.optim import adamw as adamw_lib
 from repro.optim import flatten
 from repro.topology import (TopologyConfig, TopologyRuntime, TopologyState,
-                            active_edge_fraction)
+                            active_edge_fraction, compose_mask, sym_age,
+                            tick_age)
 
 
 @dataclasses.dataclass(frozen=True)
@@ -61,6 +63,10 @@ class ConsensusConfig:
     # dynamic-topology runtime (repro.topology): the default static
     # scheduler without churn keeps the engine on the exact PR 1 code path
     dyn_topology: TopologyConfig = TopologyConfig()
+    # bounded-staleness async executor (repro.async_exec): None keeps the
+    # trainer strictly synchronous; max_staleness=0 enables the async step
+    # functions but waits for every payload (bit-identical to sync)
+    async_exec: AsyncConfig | None = None
 
 
 class TrainState(NamedTuple):
@@ -71,6 +77,7 @@ class TrainState(NamedTuple):
     penalty: PenaltyState  # [J, J] replicated
     step: jax.Array
     topo: TopologyState    # [J, J] replicated — dynamic-topology runtime
+    ledger: Any = None     # WireLedger [deg, J, W] — async executor only
 
 
 def _leading(tree, spec_fn):
@@ -99,6 +106,9 @@ class ConsensusTrainer:
         self.topo_rt = TopologyRuntime(self.graph, self.topo_cfg)
         self.dynamic = self.topo_cfg.is_dynamic and self.num_nodes > 1
         self.offsets = self.topo_rt.offsets if self.num_nodes > 1 else []
+        # async executor (repro.async_exec): staleness gating engages the
+        # masked kernel path even under a static scheduler
+        self.async_cfg = consensus.async_exec
         # rules for *inside* the pod-manual region: batch maps to data only
         rules = arch_rules(model.cfg, mesh)
         rules["batch"] = ("data",)
@@ -125,13 +135,19 @@ class ConsensusTrainer:
                                    v=self._node_stack(opt1.v))
         # two distinct buffers (never aliased: the state may be donated)
         flat_shape = (self.num_nodes, self.layout.total)
+        ledger = None
+        if self.async_cfg is not None and self.num_nodes > 1:
+            ledger = init_wire_ledger(self.layout, len(self.offsets),
+                                      self.num_nodes,
+                                      self.ccfg.compression)
         return TrainState(
             params=params, opt=opt,
             lam=jnp.zeros(flat_shape, jnp.float32),
             theta_bar_prev=jnp.zeros(flat_shape, jnp.float32),
             penalty=init_penalty_state(self.ccfg.penalty, self.num_nodes),
             step=jnp.zeros((), jnp.int32),
-            topo=self.topo_rt.init_state())
+            topo=self.topo_rt.init_state(),
+            ledger=ledger)
 
     def abstract_state(self) -> TrainState:
         """ShapeDtypeStruct mirror for the dry-run (no allocation)."""
@@ -154,10 +170,16 @@ class ConsensusTrainer:
         topo = jax.tree_util.tree_map(
             lambda x: jax.ShapeDtypeStruct(x.shape, x.dtype),
             self.topo_rt.init_state())
+        ledger = None
+        if self.async_cfg is not None and self.num_nodes > 1:
+            ledger = jax.tree_util.tree_map(
+                lambda x: jax.ShapeDtypeStruct(x.shape, x.dtype),
+                init_wire_ledger(self.layout, len(self.offsets),
+                                 self.num_nodes, self.ccfg.compression))
         return TrainState(params=params, opt=opt, lam=flat0,
                           theta_bar_prev=flat0, penalty=pen,
                           step=jax.ShapeDtypeStruct((), jnp.int32),
-                          topo=topo)
+                          topo=topo, ledger=ledger)
 
     def state_shardings(self) -> TrainState:
         """NamedShardings for every state leaf (pod-leading params etc.)."""
@@ -200,11 +222,17 @@ class ConsensusTrainer:
         flat_sh = NamedSharding(mesh, P("pod"))
         topo_sh = jax.tree_util.tree_map(lambda _: rep,
                                          self.topo_rt.init_state())
+        ledger_sh = None
+        if self.async_cfg is not None and self.num_nodes > 1:
+            # wire rows shard like the stacked payloads in the fused round
+            ledger_sh = WireLedger(
+                wires=NamedSharding(mesh, P(None, "pod")), round=rep,
+                w_prev=rep)
         return TrainState(
             params=params_sh,
             opt=adamw_lib.AdamWState(step=rep, m=opt_m, v=opt_v),
             lam=flat_sh, theta_bar_prev=flat_sh,
-            penalty=pen, step=rep, topo=topo_sh)
+            penalty=pen, step=rep, topo=topo_sh, ledger=ledger_sh)
 
     # ------------------------------------------------------- local steps ----
     def _local_loss(self, params, batch):
@@ -284,9 +312,32 @@ class ConsensusTrainer:
         return new, {"loss": loss.mean(), "grad_norm": gn}
 
     # --------------------------------------------------- consensus round ----
+    def _probe_vloss(self):
+        """Per-node objective probe function (shared by sync/async rounds).
+
+        MoE blocks carry an inner expert-parallel shard_map, which XLA
+        cannot batch under vmap — probe those sequentially per node
+        (plain GSPMD forwards; J and degree are small).
+        """
+        j = self.num_nodes
+        sequential = self.model.cfg.moe is not None
+
+        def vloss(params, batch):
+            if sequential:
+                outs = []
+                for i in range(j):
+                    p_i = jax.tree_util.tree_map(lambda x: x[i], params)
+                    b_i = jax.tree_util.tree_map(lambda x: x[i], batch)
+                    outs.append(self._local_loss(p_i, b_i)[0])
+                return jnp.stack(outs)
+            return jax.vmap(lambda p, b: self._local_loss(p, b)[0])(
+                params, batch)
+
+        return vloss
+
     def _fused_round(self, theta_flat, lam_flat, bar_prev, wires, scales,
                      e_stack, alpha, sym_sum, eta_node,
-                     bar_w=None, inv_deg=None):
+                     bar_w=None, inv_deg=None, kick_w=None):
         """One shard_map'd Pallas call over the whole flat buffer.
 
         Manual over ALL mesh axes with nothing but the kernel inside — the
@@ -296,31 +347,40 @@ class ConsensusTrainer:
 
         ``bar_w``/``inv_deg`` (dynamic topology) ride next to e_sym / the
         node scalars: the traced edge gates select the masked kernel.
+        ``kick_w`` (zero-kick absorption for newly-gated edges) is one more
+        [deg, J] operand next to the gates.
         """
         from repro.kernels import ops as kops
 
         lay = self.layout
         block_leaf = tuple(lay.block_leaf.tolist())
         masked = bar_w is not None
+        kicked = kick_w is not None
         pod = P("pod")
 
         # node scalars ride as one stacked [3|4, J] SMEM block; the traced
-        # edge gates (when present) are one extra [deg, J] operand
+        # edge gates / kick weights (when present) are extra [deg, J]
+        # operands
         rows = [alpha, sym_sum, eta_node] + ([inv_deg] if masked else [])
         node_sc = jnp.stack(rows, axis=0)
         args = [theta_flat, lam_flat, bar_prev, wires, scales, e_stack] \
-            + ([bar_w] if masked else []) + [node_sc]
+            + ([bar_w] if masked else []) + ([kick_w] if kicked else []) \
+            + [node_sc]
         in_specs = (P("pod", None), P("pod", None), P("pod", None),
                     P(None, "pod", None), P(None, "pod", None),
                     P(None, "pod")) \
-            + ((P(None, "pod"),) if masked else ()) + (P(None, "pod"),)
+            + ((P(None, "pod"),) if masked else ()) \
+            + ((P(None, "pod"),) if kicked else ()) + (P(None, "pod"),)
 
         def local(theta, lam, barp, w, s, e, *rest):
-            bw, nsc = rest if masked else (None, rest[0])
+            rest = list(rest)
+            bw = rest.pop(0) if masked else None
+            kw = rest.pop(0) if kicked else None
+            nsc = rest[0]
             return kops.consensus_round(
                 theta, lam, barp, w, s, e, nsc[0], nsc[1], nsc[2],
                 block_leaf=block_leaf, block_size=lay.block_size,
-                bar_w=bw, inv_deg=nsc[3] if masked else None)
+                bar_w=bw, inv_deg=nsc[3] if masked else None, kick_w=kw)
 
         fn = shd.shard_map_compat(
             local, self.mesh, in_specs=in_specs,
@@ -363,21 +423,7 @@ class ConsensusTrainer:
         int8 = self.ccfg.compression == "int8"
         dynamic = self.dynamic
 
-        # MoE blocks carry an inner expert-parallel shard_map, which XLA
-        # cannot batch under vmap — probe those sequentially per node
-        # (plain GSPMD forwards; J and degree are small).
-        sequential = self.model.cfg.moe is not None
-
-        def vloss(params, batch):
-            if sequential:
-                outs = []
-                for i in range(j):
-                    p_i = jax.tree_util.tree_map(lambda x: x[i], params)
-                    b_i = jax.tree_util.tree_map(lambda x: x[i], batch)
-                    outs.append(self._local_loss(p_i, b_i)[0])
-                return jnp.stack(outs)
-            return jax.vmap(lambda p, b: self._local_loss(p, b)[0])(
-                params, batch)
+        vloss = self._probe_vloss()
 
         # probe own objective (pre-update params, eq. 7 semantics)
         f_self = vloss(state.params, probe_batch)              # [J]
@@ -393,6 +439,11 @@ class ConsensusTrainer:
         f_nbr = jnp.zeros((j, j), jnp.float32)
         payloads, scale_rows, e_rows = [], [], []
         topo = state.topo
+        # scheduler zero-kick (engine side): consume the pending kick
+        # weights stored when edges gated at the END of the last round —
+        # their neighbors' parameters are on THIS round's wire
+        kick_on = dynamic and self.topo_cfg.can_gate
+        kick_rows = []
         if dynamic:
             mask_f = topo.mask.astype(jnp.float32)
             act = jnp.zeros((j,), jnp.float32)
@@ -416,19 +467,26 @@ class ConsensusTrainer:
 
             if dynamic:
                 m_off = mask_f[idx, jidx]                          # [J]
+                k_off = topo.kick[idx, jidx] if kick_on else None
                 if self.topo_cfg.skip_dead_offsets:
                     # an all-gated offset round skips its permute AND its
                     # probe at runtime; the mask is replicated so every
                     # device takes the same branch. The dead branch probes
-                    # f_self (a no-op for the eq. 8 extremes).
+                    # f_self (a no-op for the eq. 8 extremes). A pending
+                    # zero-kick keeps the offset alive: the absorption term
+                    # needs the gated neighbor's payload off the wire.
                     def _dead():
                         return (jnp.zeros((j, lay.total), payload_dtype),
                                 ones, f_self)
 
+                    need = m_off.sum() if not kick_on \
+                        else m_off.sum() + k_off.sum()
                     payload, scales_row, f_off = jax.lax.cond(
-                        m_off.sum() > 0, _exchange, _dead)
+                        need > 0, _exchange, _dead)
                 else:
                     payload, scales_row, f_off = _exchange()
+                if kick_on:
+                    kick_rows.append(k_off)
                 # the traced gate flows into the edge weights: a masked
                 # edge costs zero math in the fused kernel
                 e_sym = 0.5 * (eta[idx, jidx] + eta[jidx, idx]) * m_off
@@ -460,18 +518,19 @@ class ConsensusTrainer:
         else:
             eta_node = sym_sum / deg
             bar_w = inv_deg = None
+        kick_w = jnp.stack(kick_rows) if kick_on else None
         if self.ccfg.use_fused_kernel:
             theta_new, lam_new, bar_new, r_sq, s_sq = self._fused_round(
                 theta_flat, state.lam, state.theta_bar_prev, wires, scales,
                 e_stack, alpha, sym_sum, eta_node,
-                bar_w=bar_w, inv_deg=inv_deg)
+                bar_w=bar_w, inv_deg=inv_deg, kick_w=kick_w)
         else:
             theta_new, lam_new, bar_new, r_sq, s_sq = \
                 kref.consensus_round_ref(
                     theta_flat, state.lam, state.theta_bar_prev, wires,
                     scales, e_stack, alpha, sym_sum, eta_node,
                     block_leaf=lay.block_leaf, block_size=lay.block_size,
-                    bar_w=bar_w, inv_deg=inv_deg)
+                    bar_w=bar_w, inv_deg=inv_deg, kick_w=kick_w)
 
         params_new = lay.unpack(theta_new)
         r_norm = jnp.sqrt(r_sq)
@@ -490,6 +549,13 @@ class ConsensusTrainer:
             r_norm=r_norm, s_norm=s_norm)
         topo_new = self.topo_rt.update(topo, penalty=penalty_new,
                                        r_norm=r_norm) if dynamic else topo
+        if kick_on:
+            # edges the scheduler just gated: park their final consensus
+            # force (the symmetrized weight applied THIS round) for the
+            # kernel to absorb into the dual next round
+            newly_off = (topo.mask & ~topo_new.mask).astype(jnp.float32)
+            topo_new = topo_new._replace(
+                kick=0.5 * (eta + eta.T) * newly_off)
         new = state._replace(params=params_new, lam=lam_new,
                              theta_bar_prev=bar_new, penalty=penalty_new,
                              topo=topo_new)
@@ -512,6 +578,272 @@ class ConsensusTrainer:
                              else jnp.ones(())),
         }
         return new, metrics
+
+    # ------------------------------------------- async consensus round ----
+    def consensus_step_async(self, state: TrainState, probe_batch: Any,
+                             arrivals: jax.Array,
+                             advance: jax.Array | None = None
+                             ) -> tuple[TrainState, dict]:
+        """One bounded-staleness consensus round (``repro.async_exec``).
+
+        The synchronous round blocks on every graph offset before any
+        node's prox/dual work runs. This variant instead consumes, per
+        directed edge, the freshest payload that has LANDED — falling back
+        to the double-buffered wire ledger (the payload consumed last
+        round) when a neighbor is late — and treats a payload older than
+        ``AsyncConfig.max_staleness`` rounds as a temporarily gated edge:
+        zero math through the masked kernel, with the edge's final
+        consensus force zero-kick-absorbed into the dual so gating
+        preserves stationarity. A fresh arrival revives the edge the same
+        round.
+
+        Args:
+          arrivals: [deg, J] bool, replicated — ``arrivals[d, i]`` means
+            the payload from node ``(i + off_d) % J`` reached node i before
+            this round's compute deadline (the host executor derives it
+            from its round clock; in a real deployment it is the DMA
+            completion bit of the double buffer).
+          advance: optional [J] bool — nodes actually running a consensus
+            round this fleet tick. A frozen (mid-compute) node keeps its
+            params / duals / penalty rows; its staleness clocks still tick.
+
+        With ``max_staleness=0`` no staleness is tolerated — the executor
+        waits for every wire and this method IS the synchronous round
+        (pinned bit-identical by test), with the ledger passing through
+        untouched.
+        """
+        if self.async_cfg is None:
+            raise ValueError("consensus_step_async needs ConsensusConfig."
+                             "async_exec=AsyncConfig(...)")
+        if self.num_nodes <= 1:
+            return state, {"r_max": jnp.zeros(()), "eta_mean": jnp.asarray(
+                self.ccfg.penalty.eta0)}
+        acfg = self.async_cfg
+        if acfg.max_staleness == 0:
+            new, metrics = self.consensus_step(state, probe_batch)
+            metrics = dict(metrics, stale_edges=jnp.zeros(()),
+                           age_max=jnp.zeros((), jnp.int32))
+            return new, metrics
+
+        assert state.ledger is not None, "init_state builds the wire ledger"
+        j = self.num_nodes
+        offsets = self.offsets
+        adj = jnp.asarray(self.graph.adj)
+        pcfg = self.ccfg.penalty
+        idx = jnp.arange(j)
+        lay = self.layout
+        int8 = self.ccfg.compression == "int8"
+        dynamic = self.dynamic
+        ledger: WireLedger = state.ledger
+        vloss = self._probe_vloss()
+        n_stale = acfg.max_staleness
+
+        # ---- staleness clocks: tick, then gate -------------------------
+        # arrivals [deg, J] -> the [J, J] clock grid via the static
+        # circulant masks (scatter-free, mirroring the f_nbr writes)
+        fresh = jnp.zeros((j, j), bool)
+        covered = np.zeros((j, j), bool)
+        for d, off in enumerate(offsets):
+            circ = np.roll(np.eye(j, dtype=bool), off, axis=1)
+            covered |= circ
+            fresh = fresh | (arrivals[d][:, None] & jnp.asarray(circ))
+        # pairs outside the compiled offset superset never move a payload;
+        # keep their clocks at zero instead of counting phantom staleness
+        fresh = fresh | jnp.asarray(~covered)
+        prev_live = sym_age(state.topo) <= n_stale          # pre-tick view
+        topo = tick_age(state.topo, fresh)
+        age_s = sym_age(topo)
+        live = age_s <= n_stale              # the bounded-staleness gate
+        if self.topo_cfg.scheduler == "stale":
+            # the mask's only gating source is staleness itself, which
+            # `live` already recomputes from THIS round's clocks — gate on
+            # the composed full-graph mask instead of last epoch's mask,
+            # so a fresh arrival revives the edge the SAME round
+            base_mask = compose_mask(adj, topo, adj)
+            prev_base = compose_mask(adj, state.topo, adj)
+        else:
+            base_mask = prev_base = topo.mask
+        gate_m = base_mask & live
+        gate_f = gate_m.astype(jnp.float32)
+        # the staleness-damped per-edge penalties actually applied this
+        # round: eta / (1 + gamma * age) on active edges, zero on gated
+        # ones, symmetrized so the dual weights stay symmetric. ONE source
+        # of truth for the damping schedule: core.penalty.effective_eta.
+        eta_eff = effective_eta(pcfg, state.penalty, gate_m, age=age_s,
+                                stale_gamma=acfg.stale_gamma)
+        w_applied = 0.5 * (eta_eff + eta_eff.T)            # [J, J]
+
+        # ---- zero-kick bookkeeping -------------------------------------
+        # (a) edges that just aged past the bound absorb THIS round from
+        #     the ledger (their payload is exactly the last-known neighbor
+        #     estimate the dual was built against), at EXACTLY the weight
+        #     they applied last round (ledger.w_prev — the penalty state
+        #     has advanced one update since, so it cannot be recomputed);
+        # (b) edges the scheduler gated last round ride in topo.kick.
+        newly_stale = prev_base & prev_live & ~live
+        kick_m = jnp.where(newly_stale, ledger.w_prev, 0.0) + topo.kick
+
+        f_self = vloss(state.params, probe_batch)               # [J]
+        theta_flat = lay.pack(state.params, dtype=lay.wire_dtype)
+        wire = lay.encode_int8(theta_flat) if int8 else theta_flat
+
+        ones = jnp.ones((j, lay.num_leaves), jnp.float32)
+        sym_sum = jnp.zeros((j,), jnp.float32)
+        act = jnp.zeros((j,), jnp.float32)
+        f_nbr = jnp.zeros((j, j), jnp.float32)
+        payloads, scale_rows, e_rows = [], [], []
+        w_rows, kick_rows, ledger_rows = [], [], []
+        for d, off in enumerate(offsets):
+            jidx = (idx + off) % j
+            arr = arrivals[d].astype(bool)                      # [J]
+            held = ledger.wires[d]                              # [J, W]
+
+            def _issue(off=off):
+                # round k's permute issues regardless of who consumes it
+                # fresh — the overlap the executor's clock accounts for.
+                # The barrier pins the wire dtype (see consensus_step).
+                return jax.lax.optimization_barrier(
+                    jnp.roll(wire, -off, axis=0))
+
+            def _hold(held=held):
+                return held
+
+            # nothing arrived on this offset => the in-flight payload is
+            # still on the wire; skip the permute entirely this tick
+            rolled = jax.lax.cond(arr.any(), _issue, _hold)
+            merged = jnp.where(arr[:, None], rolled, held)
+            payload, scales_row = lay.decode_split(merged)
+            g_off = gate_f[idx, jidx]
+            k_off = kick_m[idx, jidx]
+
+            def _probe(payload=payload, scales_row=scales_row):
+                return vloss(lay.unpack(payload, scales=scales_row),
+                             probe_batch)
+
+            # probe the payload actually consumed (stale ones included —
+            # it IS our current estimate of the neighbor); a fully gated,
+            # kick-free offset skips the forward pass
+            f_off = jax.lax.cond((g_off.sum() + k_off.sum()) > 0,
+                                 _probe, lambda: f_self)
+            # staleness-damped symmetrized penalty: stale duals pull less
+            e_sym = w_applied[idx, jidx]
+            circ_f = jnp.asarray(np.roll(np.eye(j), off, axis=1),
+                                 jnp.float32)
+            f_nbr = f_nbr + f_off[:, None] * circ_f
+            sym_sum = sym_sum + e_sym
+            act = act + g_off
+            payloads.append(payload)
+            scale_rows.append(ones if scales_row is None else scales_row)
+            e_rows.append(e_sym)
+            w_rows.append(g_off)
+            kick_rows.append(k_off)
+            ledger_rows.append(merged)
+
+        wires = jnp.stack(payloads)                 # [deg, J, total]
+        scales = jnp.stack(scale_rows)              # [deg, J, L]
+        e_stack = jnp.stack(e_rows)                 # [deg, J]
+        bar_w = jnp.stack(w_rows)
+        kick_w = jnp.stack(kick_rows)
+
+        alpha = self.ccfg.prox_step / (1.0 + 2.0 * sym_sum)
+        inv_deg = jnp.where(act > 0, 1.0 / jnp.maximum(act, 1.0), 0.0)
+        eta_node = sym_sum * inv_deg
+        if self.ccfg.use_fused_kernel:
+            theta_new, lam_new, bar_new, r_sq, s_sq = self._fused_round(
+                theta_flat, state.lam, state.theta_bar_prev, wires, scales,
+                e_stack, alpha, sym_sum, eta_node,
+                bar_w=bar_w, inv_deg=inv_deg, kick_w=kick_w)
+        else:
+            theta_new, lam_new, bar_new, r_sq, s_sq = \
+                kref.consensus_round_ref(
+                    theta_flat, state.lam, state.theta_bar_prev, wires,
+                    scales, e_stack, alpha, sym_sum, eta_node,
+                    block_leaf=lay.block_leaf, block_size=lay.block_size,
+                    bar_w=bar_w, inv_deg=inv_deg, kick_w=kick_w)
+
+        params_new = lay.unpack(theta_new)
+        r_norm = jnp.sqrt(r_sq)
+        s_norm = jnp.sqrt(s_sq)
+
+        # penalties keep adapting on stale-gated and scheduler-gated graph
+        # edges (the eq. 10 top-up revives them) but never on ghost rows
+        alive = topo.node_alive
+        adj_pen = (adj & alive[:, None] & alive[None, :]) | topo.mask
+        penalty_new = update_penalty(
+            pcfg, state.penalty, adj=adj_pen, f_self=f_self, f_nbr=f_nbr,
+            r_norm=r_norm, s_norm=s_norm)
+        topo_new = self.topo_rt.update(topo, penalty=penalty_new,
+                                       r_norm=r_norm) if dynamic else topo
+        if dynamic and self.topo_cfg.can_gate:
+            # park kicks ONLY for edges that were ACTIVE this round (mask
+            # AND within the staleness bound): an edge that aged out was
+            # already absorbed in-round — the scheduler mirroring it out
+            # of the mask one epoch later must not absorb it twice
+            kick_next = w_applied \
+                * (gate_m & ~topo_new.mask).astype(jnp.float32)
+        else:
+            kick_next = jnp.zeros_like(topo.kick)
+        topo_new = topo_new._replace(kick=kick_next)
+        ledger_new = WireLedger(wires=jnp.stack(ledger_rows),
+                                round=ledger.round + 1, w_prev=w_applied)
+
+        new = state._replace(params=params_new, lam=lam_new,
+                             theta_bar_prev=bar_new, penalty=penalty_new,
+                             topo=topo_new, ledger=ledger_new)
+        if advance is not None:
+            new = self._freeze_rows(advance, new, state,
+                                    topo_new=topo_new,
+                                    ledger_new=ledger_new)
+
+        alive_f = topo.node_alive.astype(jnp.float32) \
+            * (act > 0).astype(jnp.float32)
+        if advance is not None:
+            # frozen nodes ran no real round: their residual rows were
+            # discarded by _freeze_rows, so keep them out of the extremes
+            alive_f = alive_f * advance.astype(jnp.float32)
+        r_rep, s_rep = r_norm * alive_f, s_norm * alive_f
+        f_rep = (f_self * alive_f).sum() / jnp.maximum(alive_f.sum(), 1)
+        mask_edges = jnp.maximum(base_mask.astype(jnp.float32).sum(), 1.0)
+        metrics = {
+            "r_max": r_rep.max(), "s_max": s_rep.max(),
+            "f_mean": f_rep,
+            "eta_mean": jnp.where(adj, penalty_new.eta, 0.0).sum()
+            / jnp.maximum(adj.sum(), 1),
+            "active_edges": (active_edge_fraction(topo, adj) if dynamic
+                             else jnp.ones(())),
+            "stale_edges": (base_mask & ~live).astype(jnp.float32).sum()
+            / mask_edges,
+            "age_max": jnp.where(base_mask, age_s, 0).max(),
+        }
+        return new, metrics
+
+    def _freeze_rows(self, advance: jax.Array, new: TrainState,
+                     old: TrainState, *, topo_new, ledger_new) -> TrainState:
+        """Keep non-advancing nodes' rows from ``old`` (async fleet tick).
+
+        A node mid-compute at the tick deadline runs no prox/dual/penalty
+        update: its params, duals, neighbor mean and penalty ROWS stay put.
+        Its staleness clocks and the shared topology/ledger state still
+        advance — they model the network, not the node's compute.
+        """
+        adv = advance.astype(bool)
+
+        def rows(a, b):
+            sel = adv.reshape((adv.shape[0],) + (1,) * (a.ndim - 1))
+            return jnp.where(sel, a, b)
+
+        pen_new, pen_old = new.penalty, old.penalty
+        penalty = pen_new._replace(
+            eta=rows(pen_new.eta, pen_old.eta),
+            cum_tau=rows(pen_new.cum_tau, pen_old.cum_tau),
+            budget=rows(pen_new.budget, pen_old.budget),
+            n_incr=rows(pen_new.n_incr, pen_old.n_incr),
+            f_prev=rows(pen_new.f_prev, pen_old.f_prev))
+        return new._replace(
+            params=jax.tree_util.tree_map(rows, new.params, old.params),
+            lam=rows(new.lam, old.lam),
+            theta_bar_prev=rows(new.theta_bar_prev, old.theta_bar_prev),
+            penalty=penalty, topo=topo_new, ledger=ledger_new)
 
     # ------------------------------------------------------------- churn ----
     def apply_churn(self, state: TrainState, victim: int) -> TrainState:
@@ -543,6 +875,16 @@ class ConsensusTrainer:
         """
         return (jax.jit(self.train_step, donate_argnums=(0,)),
                 jax.jit(self.consensus_step, donate_argnums=(0,)))
+
+    def jit_async_step_fns(self):
+        """Jitted consensus_step_async with the state donated.
+
+        Deliberately does NOT hand out a donated train_step: the local
+        step is the one that gets wrapped in ``with_retries`` (which may
+        replay the same state buffers) — callers jit it undonated
+        themselves, exactly like the sync launcher does.
+        """
+        return jax.jit(self.consensus_step_async, donate_argnums=(0,))
 
     def should_sync(self, step: int) -> bool:
         return self.num_nodes > 1 and (step + 1) % self.ccfg.local_steps == 0

@@ -1,6 +1,6 @@
 from repro.runtime.fault_tolerance import (ElasticController, RetryPolicy,
-                                           StragglerMonitor,
+                                           StragglerMonitor, aged_out_nodes,
                                            shrink_penalty_state, with_retries)
 
 __all__ = ["ElasticController", "RetryPolicy", "StragglerMonitor",
-           "shrink_penalty_state", "with_retries"]
+           "aged_out_nodes", "shrink_penalty_state", "with_retries"]

@@ -17,6 +17,17 @@ a smaller but still-valid consensus problem. Two elastic paths exploit that:
 
 Wall-clock monitoring is injectable (``clock``) so straggler logic is unit-
 testable on CPU without real slow hosts.
+
+Under the async executor (``repro.async_exec``) straggler detection and
+churn UNIFY: a straggler is just a node whose edges aged out. The
+bounded-staleness clocks (``TopologyState.age``) already gate a slow
+node's edges round by round — transiently, with zero-kick absorption, and
+self-healing on the next arrival. ``aged_out_nodes`` reads those same
+clocks at a patience multiple of the staleness bound: a node that stays
+aged out that long has effectively left the fleet, and ghosting it via
+``ElasticController.drop_preserving`` merely makes permanent (and
+backbone-repairs) what the staleness gates were already doing. No second
+wall-clock heuristic, one signal for both mechanisms.
 """
 from __future__ import annotations
 
@@ -89,6 +100,33 @@ class StragglerMonitor:
         self.strikes = np.where(slow, self.strikes + 1, 0)
         return [int(i) for i in np.nonzero(
             self.strikes >= self.patience)[0]]
+
+
+def aged_out_nodes(topo_state, *, max_staleness: int,
+                   patience: int = 4) -> list[int]:
+    """Nodes whose EVERY active edge has aged past ``patience x bound``.
+
+    The async executor's staleness clocks (``TopologyState.age``) are the
+    straggler signal: an edge older than ``max_staleness`` is already
+    transiently gated by the executor; a node whose freshest edge is
+    ``patience`` times older than the bound is not late, it is gone —
+    return it for a layout-preserving ghost drop. Symmetrized ages (max of
+    both directions) so a half-broken link counts as broken.
+    """
+    age = np.asarray(topo_state.age)
+    age = np.maximum(age, age.T)
+    mask = np.asarray(topo_state.mask)
+    alive = np.asarray(topo_state.node_alive)
+    cutoff = patience * max(max_staleness, 1)
+    out = []
+    for i in range(age.shape[0]):
+        if not alive[i]:
+            continue
+        edges = mask[i] & alive
+        edges[i] = False
+        if edges.any() and age[i][edges].min() > cutoff:
+            out.append(i)
+    return out
 
 
 def shrink_penalty_state(state: PenaltyState, victim: int) -> PenaltyState:

@@ -6,13 +6,14 @@ from repro.topology.schedulers import (SCHEDULERS, TopologyConfig,
                                        budget_gate, update_topology)
 from repro.topology.state import (TopologyState, active_degree,
                                   active_edge_fraction, advance,
-                                  compose_mask, init_topology_state)
+                                  compose_mask, init_topology_state,
+                                  sym_age, tick_age)
 from repro.topology.runtime import (TopologyRuntime, rotation_masks,
                                     spanning_backbone)
 
 __all__ = [
     "SCHEDULERS", "TopologyConfig", "budget_gate", "update_topology",
     "TopologyState", "active_degree", "active_edge_fraction", "advance",
-    "compose_mask", "init_topology_state",
+    "compose_mask", "init_topology_state", "sym_age", "tick_age",
     "TopologyRuntime", "rotation_masks", "spanning_backbone",
 ]

@@ -130,7 +130,9 @@ class TopologyRuntime:
         adj_n = max(int(self.graph.adj.sum()), 1)
         bb_frac = self.backbone.sum() / adj_n
         cfg = self.cfg
-        if cfg.scheduler == "static":
+        if cfg.scheduler in ("static", "stale"):
+            # stale gates only while payloads age out — zero edges in the
+            # no-straggler steady state, so the static estimate is its bound
             return 1.0
         if cfg.scheduler == "budget":
             return float(bb_frac)
@@ -216,10 +218,15 @@ class TopologyRuntime:
                 f"node {victim} (components: {comps}); widen spare_offsets")
         mask = (np.asarray(state.mask) & alive2) | core
         flipped = (mask != np.asarray(state.mask)).astype(np.int32)
+        # the ghost's staleness clocks and pending kicks die with it: its
+        # last payload is not trusted for absorption (it may be mid-crash
+        # garbage in a real deployment), so churn gating is kick-free
         new = state._replace(
             mask=jnp.asarray(mask), backbone=jnp.asarray(backbone),
             repair=jnp.asarray(repair), node_alive=jnp.asarray(alive),
-            epoch=state.epoch + jnp.asarray(flipped))
+            epoch=state.epoch + jnp.asarray(flipped),
+            age=state.age * jnp.asarray(alive2, jnp.int32),
+            kick=state.kick * jnp.asarray(alive2, jnp.float32))
         # keep the old leaves' (committed, replicated) shardings — a bare
         # host array would change jitted consumers' cache key and force a
         # recompile, defeating the point of the layout-preserving drop

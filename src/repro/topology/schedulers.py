@@ -20,9 +20,19 @@ Schedulers:
   * ``round_robin`` — rotates through the graph's permutation rounds (edge
                       coloring): each epoch activates one matching, so every
                       node talks to at most one peer per direction.
+  * ``stale``       — bounded-staleness gating for the async executor: an
+                      edge deactivates while either endpoint's wire payload
+                      is older than ``max_staleness`` rounds (the
+                      ``TopologyState.age`` clocks) and revives the moment a
+                      fresh payload lands. On the synchronous path ages stay
+                      zero, so ``stale`` degenerates to ``static``.
 
 Connectivity: no scheduler is trusted to keep the masked graph connected on
 its own — the backbone does that by construction (see ``topology.state``).
+(For ``stale`` this means a persistently slow neighbor's BACKBONE edge stays
+active in the mask; the async executor's in-round weight gating still zeroes
+its math until a payload arrives — a transient, self-healing disconnection,
+unlike scheduler gating which must preserve connectivity forever.)
 """
 from __future__ import annotations
 
@@ -32,9 +42,10 @@ import jax
 import jax.numpy as jnp
 
 from repro.core.penalty import PenaltyState, budget_exhausted
-from repro.topology.state import TopologyState, advance, compose_mask
+from repro.topology.state import (TopologyState, advance, compose_mask,
+                                  sym_age)
 
-SCHEDULERS = ("static", "budget", "random", "round_robin")
+SCHEDULERS = ("static", "budget", "random", "round_robin", "stale")
 
 
 @dataclasses.dataclass(frozen=True)
@@ -62,6 +73,8 @@ class TopologyConfig:
         ``lax.cond`` so a fully-gated offset round skips its
         collective-permute and probe at runtime (the mask is replicated, so
         every device takes the same branch).
+      max_staleness: ``stale`` — edges whose symmetrized payload age
+        exceeds this many rounds deactivate until a fresh payload arrives.
       seed: PRNG seed for the ``random`` scheduler.
     """
 
@@ -72,6 +85,7 @@ class TopologyConfig:
     period: int = 1
     spare_offsets: tuple = ()
     skip_dead_offsets: bool = True
+    max_staleness: int = 1
     seed: int = 0
 
     def __post_init__(self):
@@ -87,6 +101,17 @@ class TopologyConfig:
     def is_dynamic(self) -> bool:
         """Whether the engine needs the masked (non-PR-1) code path."""
         return self.scheduler != "static" or self.churn
+
+    @property
+    def can_gate(self) -> bool:
+        """Whether the scheduler can flip a graph edge off mid-run.
+
+        Gating engines compile the zero-kick absorption term into the fused
+        kernel; ``static`` (even with churn — a crashed node's last payload
+        is not trusted for absorption) keeps the kick-free kernel and stays
+        bit-identical to the PR 1 round.
+        """
+        return self.scheduler != "static"
 
     def validate_penalty(self, penalty_cfg) -> None:
         """Reject scheduler/penalty pairings that silently do nothing."""
@@ -158,6 +183,12 @@ def update_topology(cfg: TopologyConfig, state: TopologyState, *,
         assert rotation is not None, "round_robin needs rotation masks"
         phase = (state.t // cfg.period) % rotation.shape[0]
         pattern = adj & rotation[phase]
+
+    elif cfg.scheduler == "stale":
+        # bounded staleness: gate while either direction's payload is older
+        # than the bound; a fresh arrival (age reset by tick_age) revives
+        # the edge the same epoch — no latch, staleness is self-healing
+        pattern = adj & (sym_age(state) <= cfg.max_staleness)
 
     else:  # pragma: no cover
         raise AssertionError(cfg.scheduler)

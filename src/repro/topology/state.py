@@ -23,6 +23,21 @@ Composition of the mask (all [J, J] bool, symmetric, zero diagonal):
 Epoch counters increment whenever an edge flips active<->inactive — they
 are the per-edge analogue of ``PenaltyState.n_incr`` and feed monitoring
 (how often does the scheduler churn this edge?).
+
+The async executor (``repro.async_exec``) extends the state with two more
+per-edge arrays:
+
+  * ``age``  — the staleness clock: ``age[i, j]`` counts consensus rounds
+    since node i last consumed a FRESH wire payload from node j (0 =
+    consumed this round). The sync engine never ticks it, so it stays zero
+    on the synchronous path; the ``stale`` scheduler and the executor's
+    in-round gating both read it.
+  * ``kick`` — pending zero-kick weights: when the scheduler gates an edge
+    at the END of round t, the fused engine can only absorb that edge's
+    final consensus force into the dual at round t+1 (its neighbor's
+    parameters arrive on the wire then). ``kick[i, j]`` carries the
+    symmetrized penalty weight of each newly-gated edge across the round
+    boundary; the kernel consumes and clears it next round.
 """
 from __future__ import annotations
 
@@ -43,6 +58,8 @@ class TopologyState(NamedTuple):
     epoch: jax.Array       # [J, J] int32 — per-edge flip counters
     key: jax.Array         # PRNG key (random scheduler)
     t: jax.Array           # []     int32 epoch counter
+    age: jax.Array         # [J, J] int32 — staleness clocks (async executor)
+    kick: jax.Array        # [J, J] f32 — pending zero-kick weights
 
 
 def init_topology_state(adj: np.ndarray, backbone: np.ndarray,
@@ -57,7 +74,9 @@ def init_topology_state(adj: np.ndarray, backbone: np.ndarray,
         node_alive=jnp.ones((j,), bool),
         epoch=jnp.zeros((j, j), jnp.int32),
         key=jax.random.PRNGKey(seed),
-        t=jnp.zeros((), jnp.int32))
+        t=jnp.zeros((), jnp.int32),
+        age=jnp.zeros((j, j), jnp.int32),
+        kick=jnp.zeros((j, j), jnp.float32))
 
 
 def compose_mask(pattern: jax.Array, state: TopologyState,
@@ -75,6 +94,30 @@ def advance(state: TopologyState, new_mask: jax.Array,
     return state._replace(mask=new_mask, epoch=state.epoch + flipped,
                           key=state.key if key is None else key,
                           t=state.t + 1)
+
+
+def tick_age(state: TopologyState, fresh: jax.Array) -> TopologyState:
+    """Advance the staleness clocks: reset where ``fresh`` [J, J], else +1.
+
+    Only the async executor calls this (once per consensus round) — on the
+    synchronous path every payload is fresh every round and ``age`` stays
+    identically zero.
+    """
+    age = jnp.where(fresh, 0, state.age + 1).astype(jnp.int32)
+    return state._replace(age=age)
+
+
+def sym_age(state: TopologyState) -> jax.Array:
+    """[J, J] int32 — symmetrized staleness: max over both directions.
+
+    ``age[i, j]`` and ``age[j, i]`` generally differ (i and j consume each
+    other's payloads at different times). Weighting consensus by the max
+    keeps the applied penalties symmetric, which preserves the
+    ``sum_i lam_i = 0`` dual invariant (see ``core.admm`` docstring) at the
+    cost of piggy-backing one int per edge on the wire in a real
+    deployment (the simulation's replicated state gets it for free).
+    """
+    return jnp.maximum(state.age, state.age.T)
 
 
 def active_degree(state: TopologyState) -> jax.Array:

@@ -1,0 +1,127 @@
+"""Edge-case coverage for ``repro.core.penalty`` (async-PR satellite).
+
+Pins the corners the async executor leans on: budget exhaustion and
+revival on fully-gated / just-revived edges, ``effective_eta`` under
+topology gating and staleness damping, and clip behavior when the tau
+probes hit their analytic extremes.
+"""
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.penalty import (PenaltyConfig, budget_exhausted,
+                                compute_tau, effective_eta,
+                                init_penalty_state, staleness_damping,
+                                update_penalty)
+
+
+def _adj(j):
+    return jnp.asarray(~np.eye(j, dtype=bool))
+
+
+# ----------------------------------------------------- budget corners ----
+def test_budget_exhausted_on_fully_gated_then_revived_edges():
+    cfg = PenaltyConfig(scheme="nap", eta0=1.0, budget_init=1.0)
+    st = init_penalty_state(cfg, 4)
+    # spend every directed budget
+    st = st._replace(cum_tau=st.budget + 0.5)
+    ex = np.asarray(budget_exhausted(st))
+    assert ex.all()
+    # a top-up (eq. 10) on one edge revives exactly that edge
+    budget = np.asarray(st.budget).copy()
+    budget[1, 2] = float(st.cum_tau[1, 2]) + 1.0
+    st2 = st._replace(budget=jnp.asarray(budget))
+    ex2 = np.asarray(budget_exhausted(st2))
+    assert not ex2[1, 2] and ex2[2, 1]          # directed semantics
+    assert ex2.sum() == ex.sum() - 1
+
+
+def test_budget_topup_fires_only_while_objective_moves():
+    cfg = PenaltyConfig(scheme="nap", eta0=1.0, budget_init=1.0,
+                        beta=1e-3, relative_beta=True)
+    j = 3
+    adj = _adj(j)
+    st = init_penalty_state(cfg, j)
+    # exhausted by a hair: one geometric top-up (alpha^1 T = 0.5) reopens
+    st = st._replace(cum_tau=st.budget + 0.1,
+                     f_prev=jnp.asarray([1.0, 1.0, 1.0]))
+    f_move = jnp.asarray([2.0, 1.0, 1.0])               # node 0 moving
+    f_nbr = jnp.broadcast_to(f_move[:, None], (j, j))
+    st2 = update_penalty(cfg, st, adj=adj, f_self=f_move, f_nbr=f_nbr)
+    topped = np.asarray(st2.budget) > np.asarray(st.budget)
+    assert topped[0].sum() == 2                 # node 0's edges revived
+    assert not topped[1:].any()                 # calm nodes stay exhausted
+    assert (np.asarray(st2.n_incr)[0, 1:] == 1).all()
+    # revived edges are no longer exhausted (the stale/budget gate reopens)
+    assert not np.asarray(budget_exhausted(st2))[0, 1:].any()
+
+
+# ---------------------------------------------------- effective eta ------
+def test_effective_eta_fully_gated_and_just_revived():
+    cfg = PenaltyConfig(scheme="nap", eta0=2.0)
+    j = 3
+    st = init_penalty_state(cfg, j)
+    eta = np.full((j, j), 5.0, np.float32)      # adapted away from eta0
+    st = st._replace(eta=jnp.asarray(eta))
+    gated = jnp.zeros((j, j), bool)             # fully-gated topology
+    assert float(jnp.abs(effective_eta(cfg, st, gated)).max()) == 0.0
+    # just-revived edge re-enters at its ADAPTED eta, not eta0
+    one = np.zeros((j, j), bool)
+    one[0, 1] = one[1, 0] = True
+    eff = np.asarray(effective_eta(cfg, st, jnp.asarray(one)))
+    assert eff[0, 1] == 5.0 and eff[1, 0] == 5.0
+    assert eff.sum() == 10.0
+
+
+def test_effective_eta_staleness_damping():
+    cfg = PenaltyConfig(scheme="nap", eta0=2.0)
+    j = 3
+    st = init_penalty_state(cfg, j)
+    adj = _adj(j)
+    age = np.zeros((j, j), np.int32)
+    age[0, 1] = age[1, 0] = 4
+    eff = np.asarray(effective_eta(cfg, st, adj, age=jnp.asarray(age),
+                                   stale_gamma=0.5))
+    assert eff[0, 1] == pytest.approx(2.0 / 3.0)    # 2 / (1 + 0.5*4)
+    assert eff[0, 2] == 2.0                         # fresh edge undamped
+
+
+def test_staleness_damping_properties():
+    age = jnp.asarray([0, 1, 2, 10, 100], jnp.int32)
+    d = np.asarray(staleness_damping(age, 0.5))
+    assert d[0] == 1.0                              # fresh == exactly 1
+    assert (np.diff(d) < 0).all()                   # strictly decreasing
+    assert (d > 0).all()
+    assert np.asarray(staleness_damping(age, 0.0)).tolist() == [1.0] * 5
+
+
+# ------------------------------------------------------ clip extremes ----
+def test_clip_at_tau_extremes():
+    """tau in [-1/2, 1] (eq. 7/8): drive probes to both extremes and pin
+    eta's clip behavior at eta_min / eta_max."""
+    j = 3
+    adj = _adj(j)
+    # extreme probe split: node 0 thinks itself worst (kappa_self=2,
+    # neighbors at 1) => tau = +1 on its edges; neighbors see tau = -1/2
+    f_self = jnp.asarray([2.0, 1.0, 1.0])
+    f_nbr = jnp.asarray([[0.0, 1.0, 1.0],
+                         [2.0, 0.0, 2.0],
+                         [2.0, 2.0, 0.0]])
+    tau = np.asarray(compute_tau(adj, f_self, f_nbr))
+    assert tau[0, 1] == pytest.approx(1.0)
+    assert tau[1, 0] == pytest.approx(-0.5)
+    # ap eta = eta0 (1 + tau) in [eta0/2, 2 eta0]; tight eta_max clips the
+    # grow side, tight eta_min clips the shrink side, eta0 is NOT clipped
+    # on non-edges (they are pinned to eta0 by construction)
+    cfg = PenaltyConfig(scheme="ap", eta0=1.0, eta_min=0.6, eta_max=1.5)
+    st = update_penalty(cfg, init_penalty_state(cfg, j), adj=adj,
+                        f_self=f_self, f_nbr=f_nbr)
+    eta = np.asarray(st.eta)
+    assert eta[0, 1] == 1.5                     # 2.0 clipped to eta_max
+    assert eta[1, 0] == 0.6                     # 0.5 clipped to eta_min
+    assert eta[0, 0] == 1.0                     # diagonal pinned to eta0
+    # degenerate neighborhood (all probes equal): tau = 0, eta = eta0
+    flat = jnp.ones((j,))
+    st2 = update_penalty(cfg, init_penalty_state(cfg, j), adj=adj,
+                         f_self=flat, f_nbr=jnp.ones((j, j)))
+    assert np.allclose(np.asarray(st2.eta), 1.0)

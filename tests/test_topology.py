@@ -136,6 +136,39 @@ def test_budget_gate_latches_and_revives_on_topup():
     assert np.asarray(st3.epoch)[gated].min() >= 2
 
 
+def test_stale_scheduler_gates_on_age_and_revives_on_arrival():
+    """The async executor's scheduler: edges deactivate while either
+    direction's payload age exceeds the bound and revive (no latch) the
+    epoch a fresh payload resets the clock."""
+    from repro.topology import tick_age
+    j = 6
+    g = build_graph("complete", j)
+    rt = TopologyRuntime(g, TopologyConfig(scheduler="stale",
+                                           max_staleness=1))
+    st = rt.init_state()
+    pen = init_penalty_state(PenaltyConfig(scheme="nap"), j)
+    # ages zero -> degenerates to static
+    st = rt.update(st, penalty=pen, r_norm=jnp.zeros(j))
+    assert np.array_equal(np.asarray(st.mask), g.adj)
+    # node 0's payloads stop arriving: after 2 stale ticks its non-backbone
+    # edges gate (one direction aging is enough — sym_age is the max)
+    fresh = np.ones((j, j), bool)
+    fresh[:, 0] = False
+    for _ in range(2):
+        st = tick_age(st, jnp.asarray(fresh))
+    st = rt.update(st, penalty=pen, r_norm=jnp.zeros(j))
+    m = np.asarray(st.mask)
+    bb = np.asarray(st.backbone)
+    assert not m[0, 2:-1].any()                   # chords to node 0 gated
+    assert np.array_equal(m, m.T)
+    assert (m & ~bb)[1:, 1:].any()                # other edges untouched
+    assert np.array_equal(m | bb, m)              # backbone subset of mask
+    # a fresh arrival resets the clocks -> full revival, no latch
+    st = tick_age(st, jnp.asarray(np.ones((j, j), bool)))
+    st = rt.update(st, penalty=pen, r_norm=jnp.zeros(j))
+    assert np.array_equal(np.asarray(st.mask), g.adj)
+
+
 def test_round_robin_rotates_and_random_is_deterministic():
     j = 8
     g = build_graph("complete", j)
