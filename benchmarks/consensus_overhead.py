@@ -33,7 +33,7 @@ def _time_round(cons, state, data, *, rounds: int = 10):
     return float(np.median(times)), state
 
 
-def run(steps: int = 6) -> list[dict]:
+def run(steps: int = 6, sharded: bool = False) -> list[dict]:
     import jax
     if len(jax.devices()) < 8:
         print("consensus_overhead: needs 8 devices "
@@ -115,6 +115,54 @@ def run(steps: int = 6) -> list[dict]:
                 }
                 print(f"consensus bench ({tag}): local {t_local*1e3:.1f}ms "
                       f"round {t_cons*1e3:.1f}ms")
+        if sharded:
+            # sharded-engine cell (--sharded): measured sharded fused
+            # rounds plus the per-device consensus-state HBM report the
+            # CI job uploads as an artifact
+            hbm_report = {"mesh": bench["mesh"], "arch": bench["arch"],
+                          "compressions": {}}
+            for compression in ("none", "int8"):
+                tr = ConsensusTrainer(
+                    model, mesh, adamw=AdamWConfig(lr=1e-2),
+                    consensus=ConsensusConfig(
+                        penalty=PenaltyConfig(scheme="nap", eta0=0.1),
+                        topology="ring", local_steps=4,
+                        compression=compression, shard_consensus=True))
+                state = tr.init_state(jax.random.PRNGKey(0))
+                train, cons = tr.jit_step_fns()
+                state, m = train(state, data.batch(0))          # warm
+                t0 = time.time()
+                for s in range(steps):      # own local-step measurement —
+                    state, m = train(state, data.batch(s))  # no reuse of
+                jax.block_until_ready(m["loss"])            # earlier cells
+                t_local_sh = (time.time() - t0) / steps
+                t_cons, state = _time_round(cons, state, data)
+                wire_bytes = len(tr.offsets) * tr.slayout.wire_bytes(
+                    compression)
+                rows.append({"mode": f"measured_sharded_{compression}",
+                             "wire_bytes_per_step": wire_bytes,
+                             "vs_allreduce": round(
+                                 t_cons / max(t_local_sh, 1e-9), 3)})
+                bench["rounds"][f"sharded_{compression}"] = {
+                    "round_ms": round(t_cons * 1e3, 2),
+                    "local_step_ms": round(t_local_sh * 1e3, 2),
+                    "wire_bytes_per_round": wire_bytes,
+                }
+                print(f"consensus bench (sharded_{compression}): "
+                      f"round {t_cons*1e3:.1f}ms")
+                hbm_report["compressions"][compression] = \
+                    fused_round_roofline(
+                        model, mesh, compression=compression,
+                        shard_consensus=True,
+                        with_ledger=True)["consensus_state"]
+            state_rep = hbm_report["compressions"]["none"]
+            hbm_report["shrink_factor"] = round(
+                state_rep["per_device_unsharded"]["total"]
+                / max(state_rep["per_device"]["total"], 1), 2)
+            path = write_json("consensus_hbm_report.json", hbm_report)
+            print(f"wrote {path} (per-device consensus-state shrink = "
+                  f"{hbm_report['shrink_factor']}x)")
+            bench["hbm_report"] = hbm_report
         bench["fused_round_model"] = {
             comp: fused_round_roofline(model, mesh, compression=comp)
             for comp in ("none", "int8")}
@@ -129,4 +177,10 @@ def run(steps: int = 6) -> list[dict]:
 
 
 if __name__ == "__main__":
-    run()
+    import argparse
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--sharded", action="store_true",
+                    help="add the sharded-engine cell (measured sharded "
+                         "rounds + per-device consensus-state HBM report)")
+    args = ap.parse_args()
+    run(sharded=args.sharded)

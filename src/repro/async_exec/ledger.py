@@ -71,8 +71,18 @@ class WireLedger(NamedTuple):
     w_prev: jax.Array  # [J, J] f32 — weights applied last round
 
 
-def wire_width(layout, compression: str) -> int:
-    """Elements per wire row (int8 payloads carry the scale tail)."""
+def wire_width(layout, compression: str, slayout=None) -> int:
+    """Elements per wire row (int8 payloads carry the scale tail).
+
+    With ``slayout`` (a ``flatten.ShardedLayout``) the row is the SHARDED
+    wire format — per-shard slabs each carrying their own int8 scale tail,
+    so a device's ledger slab holds exactly the bytes its shard decodes
+    (staleness absorption reads only local bytes).
+    """
+    if slayout is not None:
+        # n_shards * shard wire width: == layout.total for a float wire,
+        # + one 4*num_leaves tail per shard for int8
+        return slayout.n_shards * slayout.wire_width(compression)
     if compression == "int8":
         return layout.total + 4 * layout.num_leaves
     return layout.total
@@ -83,11 +93,11 @@ def wire_row_dtype(layout, compression: str):
 
 
 def init_wire_ledger(layout, deg: int, num_nodes: int,
-                     compression: str) -> WireLedger:
+                     compression: str, slayout=None) -> WireLedger:
     """Zero-filled ledger; the executor guarantees the first read of every
     edge is fresh (the clock marks a node's initial parameters as a landed
     round -1 send), so the zeros are never consumed."""
-    w = wire_width(layout, compression)
+    w = wire_width(layout, compression, slayout)
     return WireLedger(
         wires=jnp.zeros((max(deg, 1), num_nodes, w),
                         wire_row_dtype(layout, compression)),

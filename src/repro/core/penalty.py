@@ -287,6 +287,37 @@ def effective_eta(cfg: PenaltyConfig, state: PenaltyState,
     return eta
 
 
+def freeze_penalty(advance: jax.Array, new: PenaltyState,
+                   old: PenaltyState) -> PenaltyState:
+    """Per-EDGE freeze for a fleet tick where only ``advance`` nodes ran.
+
+    Edge entry [i, j] keeps the NEW value iff either endpoint advanced;
+    it stays at the OLD value only when both endpoints were frozen. The
+    earlier per-ROW freeze (frozen node i keeps its whole eta row) left
+    edge (i, j) asymmetric whenever j advanced: eta[j, i] adapted while
+    eta[i, j] stayed put, so the applied weight 0.5*(eta_ij + eta_ji)
+    drifted from both endpoints' view of the edge. Freezing per edge keeps
+    a frozen node's incident entries adapting in BOTH directions (the
+    advancing neighbor's probe round is the edge's shared update), so the
+    penalty matrix evolves symmetrically for symmetric schedules.
+
+    ``f_prev`` stays per-node: it is node i's memory of its own objective
+    probe, and a frozen node genuinely ran no probe.
+    """
+    adv = advance.astype(bool)
+    keep_new = adv[:, None] | adv[None, :]               # [J, J]
+
+    def edges(a, b):
+        return jnp.where(keep_new, a, b)
+
+    return new._replace(
+        eta=edges(new.eta, old.eta),
+        cum_tau=edges(new.cum_tau, old.cum_tau),
+        budget=edges(new.budget, old.budget),
+        n_incr=edges(new.n_incr, old.n_incr),
+        f_prev=jnp.where(adv, new.f_prev, old.f_prev))
+
+
 def budget_exhausted(state: PenaltyState) -> jax.Array:
     """[J, J] bool — directed edges whose eq. (9) budget is spent.
 

@@ -82,6 +82,23 @@ def axis_size(name: str) -> int:
     return jax.lax.psum(1, name)
 
 
+def inpod_axes(mesh: Mesh | None) -> tuple[tuple[str, ...], int]:
+    """Non-'pod' mesh axes and their total device count.
+
+    The consensus engine's in-pod shard grid: ``ConsensusTrainer`` and the
+    dry-run roofline both derive ``n_shards`` from this ONE helper so the
+    accounting can never disagree with the engine. Returns ``((), 1)``
+    when there is no mesh or no pod axis (nothing to shard over).
+    """
+    if mesh is None or "pod" not in mesh.axis_names:
+        return (), 1
+    axes = tuple(a for a in mesh.axis_names if a != "pod")
+    size = 1
+    for a in axes:
+        size *= int(mesh.shape[a])
+    return axes, size
+
+
 def shard_map_compat(fn, mesh, *, in_specs, out_specs, manual_axes=None):
     """``shard_map`` across jax versions.
 

@@ -369,10 +369,11 @@ def _row_round(theta, lam, bar_prev, wires, scales, e_sym, node_scalars,
                                              "interpret", "whole_rows"))
 def consensus_round(theta, lam, bar_prev, wires, scales, e_sym,
                     alpha, eta_sum, eta_node, *,
-                    block_leaf: tuple[int, ...], block_size: int,
+                    block_leaf: tuple[int, ...] | None, block_size: int,
                     interpret: bool = True,
                     whole_rows: bool | None = None,
-                    bar_w=None, inv_deg=None, kick_w=None):
+                    bar_w=None, inv_deg=None, kick_w=None,
+                    block_leaf_arr=None):
     """Whole-round fused kernel over the flat buffer.
 
     Args:
@@ -396,6 +397,12 @@ def consensus_round(theta, lam, bar_prev, wires, scales, e_sym,
         ``0.5 * sum_d kick_w[d] * (theta - dequant(wire[d]))`` — the final
         consensus force of edges gated since the last round. Passing None
         compiles the kick-free kernel (bit-identical to PR 2).
+      block_leaf_arr: optional TRACED [num_blocks] int32 block->leaf table
+        replacing the static ``block_leaf`` tuple (pass ``block_leaf=None``
+        then). The sharded engine uses this: under shard_map every device
+        runs the same program on a DIFFERENT slab of the flat axis, so its
+        slab's table must be data, not program. The table was already fed
+        to the kernel as an SMEM operand — only the tracing changes.
 
     Returns (theta_new [J, total], lam_new [J, total], bar [J, total] f32,
              r_sq [J], s_sq [J]).
@@ -412,7 +419,8 @@ def consensus_round(theta, lam, bar_prev, wires, scales, e_sym,
     deg = wires.shape[0]
     assert total % block_size == 0, (total, block_size)
     nblocks = total // block_size
-    assert len(block_leaf) == nblocks, (len(block_leaf), nblocks)
+    assert (block_leaf is None) != (block_leaf_arr is None), \
+        "exactly one of block_leaf / block_leaf_arr"
     masked = bar_w is not None
     assert masked == (inv_deg is not None), "bar_w and inv_deg travel together"
     assert kick_w is None or masked, "kick_w needs the masked kernel"
@@ -423,7 +431,10 @@ def consensus_round(theta, lam, bar_prev, wires, scales, e_sym,
     if masked:
         rows.append(jnp.asarray(inv_deg, jnp.float32))
     node_scalars = jnp.stack(rows)                    # [3|4, J]
-    block_leaf_arr = jnp.asarray(block_leaf, jnp.int32)
+    if block_leaf_arr is None:
+        assert len(block_leaf) == nblocks, (len(block_leaf), nblocks)
+        block_leaf_arr = jnp.asarray(block_leaf, jnp.int32)
+    assert block_leaf_arr.shape == (nblocks,), (block_leaf_arr.shape, nblocks)
 
     if interpret if whole_rows is None else whole_rows:
         tn, ln, bar, rsq, ssq = _row_round(

@@ -72,16 +72,21 @@ def consensus_update(theta, lam, nbr_avg, theta_bar, theta_bar_prev, *,
 def consensus_round(theta, lam, bar_prev, wires, scales, e_sym,
                     alpha, eta_sum, eta_node, *, block_leaf, block_size,
                     whole_rows: bool | None = None,
-                    bar_w=None, inv_deg=None, kick_w=None):
+                    bar_w=None, inv_deg=None, kick_w=None,
+                    block_leaf_arr=None):
     """Whole-round fused flat-buffer kernel (see consensus_update module).
 
     ``bar_w``/``inv_deg`` select the edge-gated dynamic-topology variant;
     ``kick_w`` additionally compiles the zero-kick dual absorption.
+    ``block_leaf_arr`` (traced) replaces the static ``block_leaf`` tuple on
+    the sharded engine path (per-device slab tables).
     """
     return _cu.consensus_round(theta, lam, bar_prev, wires, scales, e_sym,
                                alpha, eta_sum, eta_node,
-                               block_leaf=tuple(block_leaf),
+                               block_leaf=(None if block_leaf is None
+                                           else tuple(block_leaf)),
                                block_size=block_size,
                                interpret=interpret_mode(),
                                whole_rows=whole_rows,
-                               bar_w=bar_w, inv_deg=inv_deg, kick_w=kick_w)
+                               bar_w=bar_w, inv_deg=inv_deg, kick_w=kick_w,
+                               block_leaf_arr=block_leaf_arr)

@@ -76,9 +76,38 @@ def collective_bytes(hlo_text: str) -> dict:
     return totals
 
 
+def consensus_state_bytes(layout, *, deg: int, compression: str,
+                          n_shards: int = 1,
+                          with_ledger: bool = False) -> dict:
+    """Per-DEVICE bytes of the flat consensus state.
+
+    Counts what one device materializes for its pod's node row: the f32
+    lam / theta_bar_prev flat buffers, the stacked per-offset wire rows the
+    fused round streams, and (async executor) the wire-ledger rows. With
+    ``n_shards > 1`` (``ConsensusConfig.shard_consensus``) each device
+    holds only its in-pod slab, so everything shrinks by ~the in-pod axis
+    size — the int8 wire keeps one 4*num_leaves scale tail per shard, the
+    only term that does not divide.
+    """
+    if n_shards > 1:
+        slay = layout.shard(n_shards)
+        flat = 4 * slay.shard_total
+        wire_row = slay.wire_row_bytes(compression)
+    else:
+        flat = 4 * layout.total
+        wire_row = layout.wire_bytes(compression)
+    out = {"lam": flat, "theta_bar_prev": flat,
+           "wire_rows": deg * wire_row}
+    if with_ledger:
+        out["ledger_rows"] = deg * wire_row
+    out["total"] = sum(out.values())
+    return out
+
+
 def fused_round_roofline(model: "Model", mesh, *, compression: str,
                          topology: str = "ring", block_size: int = 0,
-                         dyn_topology=None) -> dict:
+                         dyn_topology=None, shard_consensus: bool = False,
+                         with_ledger: bool = False) -> dict:
     """Analytic HBM/wire model of the fused flat-buffer consensus round.
 
     The Pallas round kernel is opaque to XLA's cost analysis (and runs in
@@ -98,16 +127,30 @@ def fused_round_roofline(model: "Model", mesh, *, compression: str,
     offsets cost nothing). The HBM model still streams the compiled offset
     superset — wire buffers are stacked regardless. ``active_edge_frac``
     reports the finer edge-level fraction (zero-math gated edges).
+
+    ``shard_consensus`` switches every per-device figure to the SHARDED
+    engine: the flat state and the kernel's HBM passes shrink by the
+    in-pod axis size (each device streams only its slab), each permute
+    moves one per-shard wire slab per device, and the report adds a
+    per-device ``consensus_state`` breakdown for both modes (the ISSUE
+    acceptance shrink).
     """
     from repro.core.graph import build_graph
+    from repro.distributed.sharding import inpod_axes
     from repro.optim import flatten
     from repro.topology import TopologyConfig, TopologyRuntime
 
     import jax.numpy as jnp
 
+    # same guards as ConsensusTrainer (via the shared inpod_axes helper):
+    # a single-pod mesh runs no consensus round, so nothing shards
+    _, inner_size = inpod_axes(mesh)
+    n_shards = inner_size if (shard_consensus and inner_size > 1
+                              and int(mesh.shape["pod"]) > 1) else 1
     ap = model.abstract_params()
     bs = block_size or flatten.auto_block_size(ap)
-    lay = flatten.FlatLayout.for_tree(ap, block_size=bs, node_axis=False)
+    lay = flatten.FlatLayout.for_tree(ap, block_size=bs, node_axis=False,
+                                      shards=n_shards)
     j = int(mesh.shape["pod"])
     topo_rt = TopologyRuntime(build_graph(topology, j),
                               dyn_topology or TopologyConfig())
@@ -118,26 +161,49 @@ def fused_round_roofline(model: "Model", mesh, *, compression: str,
     active_offsets = topo_rt.expected_active_offsets() or 1.0
     n = lay.total
     tb = jnp.dtype(lay.wire_dtype).itemsize            # theta element bytes
-    wire_bytes = int(active_offsets * lay.wire_bytes(compression))
-    # kernel: read theta (tb) + lam/bar_prev (f32) + deg wires,
-    #         write theta (tb) + lam/bar (f32)
-    fused_hbm = n * (2 * tb + 4 * 4) + deg * lay.wire_bytes(compression)
+    # per NODE per round (sum over the node's shards: the sharded int8
+    # wire additionally carries one scale tail per shard)
+    row_bytes = lay.shard(n_shards).wire_bytes(compression) \
+        if n_shards > 1 else lay.wire_bytes(compression)
+    wire_bytes = int(active_offsets * row_bytes)
+    # kernel, per NODE: read theta (tb) + lam/bar_prev (f32) + deg wires,
+    # write theta (tb) + lam/bar (f32). The *_per_device variants divide
+    # by the shard grid (each device streams only its slab); the naive
+    # per-leaf path is replicated in-pod, so its per-node and per-device
+    # figures coincide — compare the *_passes fields (same per-node base)
+    # for the fusion win alone, and naive_s / fused_kernel_s for wall
+    # clock (which legitimately includes the parallel-slab-streaming win).
+    fused_hbm = n * (2 * tb + 4 * 4) + deg * row_bytes
+    fused_hbm_dev = fused_hbm // n_shards
     # naive per-leaf path adds ~2 accumulator read-modify-write passes per
-    # offset plus a full dequant materialization (all f32)
-    naive_hbm = fused_hbm + deg * n * 4 * 3
+    # offset plus a full dequant materialization (all f32, unsharded)
+    naive_hbm = n * (2 * tb + 4 * 4) + deg * lay.wire_bytes(compression) \
+        + deg * n * 4 * 3
     return {
         "flat_elems": n, "block_size": bs, "blocks": lay.num_blocks,
         "padding_frac": round(lay.waste_frac, 4),
         "offsets_compiled": deg,
         "active_edge_frac": round(active_frac, 4),
         "active_offsets": round(active_offsets, 2),
+        "n_shards": n_shards,
         "wire_bytes_per_round": wire_bytes,
+        "wire_bytes_per_device": int(active_offsets * row_bytes
+                                     / n_shards),
         "fused_hbm_bytes": fused_hbm,
+        "fused_hbm_bytes_per_device": fused_hbm_dev,
         "fused_hbm_passes": round(fused_hbm / (n * 4), 2),
         "naive_hbm_bytes": naive_hbm,
         "naive_hbm_passes": round(naive_hbm / (n * 4), 2),
-        "fused_kernel_s": fused_hbm / HBM_BW,
+        "fused_kernel_s": fused_hbm_dev / HBM_BW,
         "naive_s": naive_hbm / HBM_BW,
+        "consensus_state": {
+            "per_device": consensus_state_bytes(
+                lay, deg=deg, compression=compression, n_shards=n_shards,
+                with_ledger=with_ledger),
+            "per_device_unsharded": consensus_state_bytes(
+                lay, deg=deg, compression=compression, n_shards=1,
+                with_ledger=with_ledger),
+        },
     }
 
 
@@ -193,6 +259,7 @@ KNOBS = {
     "compression": "none",   # consensus exchange quantization
     "probe_frac": 1,         # probe-batch reduction for the consensus round
     "topo_scheduler": "static",  # dynamic-topology edge scheduler
+    "shard_consensus": False,    # in-pod sharded flat consensus state
 }
 
 
@@ -221,6 +288,7 @@ def _compile_step(cfg: ArchConfig, cell: ShapeCell, mesh, *,
                     topology="ring", local_steps=8,
                     compression=KNOBS["compression"],
                     grad_rs=KNOBS["grad_rs"],
+                    shard_consensus=KNOBS["shard_consensus"],
                     dyn_topology=TopologyConfig(
                         scheduler=KNOBS["topo_scheduler"])))
             state = trainer.abstract_state()
@@ -367,7 +435,8 @@ def lower_cell(cfg: ArchConfig, cell: ShapeCell, *, multi_pod: bool,
         from repro.topology import TopologyConfig as _TC
         rec["consensus"]["fused_round_model"] = fused_round_roofline(
             model, mesh, compression=KNOBS["compression"],
-            dyn_topology=_TC(scheduler=KNOBS["topo_scheduler"]))
+            dyn_topology=_TC(scheduler=KNOBS["topo_scheduler"]),
+            shard_consensus=KNOBS["shard_consensus"])
     rec["lower_compile_s"] = round(time.time() - t0, 1)
     main = rec[key]
     mf = model_flops(model, cell)

@@ -71,6 +71,11 @@ def parse_args(argv=None):
     ap.add_argument("--slow-node", default="",
                     help="async drill: NODE:FACTOR — model pod NODE taking "
                          "FACTOR x the fleet round time (e.g. 0:2.0)")
+    ap.add_argument("--shard-consensus", action="store_true",
+                    help="shard the flat consensus state (lam, neighbor "
+                         "mean, wire/ledger rows) over the in-pod mesh "
+                         "axes: per-device consensus-state HBM shrinks by "
+                         "the in-pod axis size (docs/consensus_engine.md)")
     ap.add_argument("--local-steps", type=int, default=4)
     ap.add_argument("--eta0", type=float, default=0.1)
     ap.add_argument("--lr", type=float, default=1e-2)
@@ -109,6 +114,7 @@ def main(argv=None):
             penalty=PenaltyConfig(scheme=args.scheme, eta0=args.eta0),
             topology=args.topology, local_steps=args.local_steps,
             compression=args.compression,
+            shard_consensus=args.shard_consensus,
             dyn_topology=TopologyConfig(scheduler=topo_sched, churn=churn,
                                         max_staleness=args.max_staleness),
             async_exec=(AsyncConfig(max_staleness=args.max_staleness)

@@ -39,7 +39,8 @@ from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 from repro.async_exec.ledger import AsyncConfig, WireLedger, init_wire_ledger
 from repro.core.graph import Graph, build_graph
 from repro.core.penalty import (PenaltyConfig, PenaltyState, effective_eta,
-                                init_penalty_state, update_penalty)
+                                freeze_penalty, init_penalty_state,
+                                update_penalty)
 from repro.models.model import Model, arch_rules
 from repro.distributed import sharding as shd
 from repro.kernels import ref as kref
@@ -60,6 +61,12 @@ class ConsensusConfig:
     use_fused_kernel: bool = True  # Pallas consensus_round (interpret on CPU)
     block_size: int = 0            # flat-layout block; 0 => auto
     grad_rs: bool = False          # reduce-scatter grads to param shards
+    # shard the flat consensus state (lam / theta_bar_prev / wire / ledger)
+    # over the in-pod mesh axes: P('pod', ('data', 'model', ...)). Each
+    # device then runs the fused kernel on only its flat-axis slab and
+    # per-device consensus-state HBM shrinks by the in-pod axis size.
+    # False keeps the PR 1-3 replicated-in-pod path byte-identical.
+    shard_consensus: bool = False
     # dynamic-topology runtime (repro.topology): the default static
     # scheduler without churn keeps the engine on the exact PR 1 code path
     dyn_topology: TopologyConfig = TopologyConfig()
@@ -113,11 +120,22 @@ class ConsensusTrainer:
         rules = arch_rules(model.cfg, mesh)
         rules["batch"] = ("data",)
         self.inner_rules = rules
-        # static flat-buffer layout for the consensus engine
+        # in-pod sharding of the flat consensus state: one shard per device
+        # position on the non-pod mesh axes (the engine's shard grid)
+        self.inner_axes, inner_size = shd.inpod_axes(
+            mesh if self.has_pod else None)
+        self.sharded = bool(consensus.shard_consensus) \
+            and self.num_nodes > 1 and inner_size > 1
+        self.n_shards = inner_size if self.sharded else 1
+        # static flat-buffer layout for the consensus engine (shards=1 is
+        # byte-identical to the unsharded PR 1 layout)
         ap = model.abstract_params()
         bs = consensus.block_size or flatten.auto_block_size(ap)
         self.layout = flatten.FlatLayout.for_tree(ap, block_size=bs,
-                                                  node_axis=False)
+                                                  node_axis=False,
+                                                  shards=self.n_shards)
+        self.slayout = self.layout.shard(self.n_shards) if self.sharded \
+            else None
 
     # ------------------------------------------------------------ state ----
     def _node_stack(self, tree):
@@ -139,7 +157,8 @@ class ConsensusTrainer:
         if self.async_cfg is not None and self.num_nodes > 1:
             ledger = init_wire_ledger(self.layout, len(self.offsets),
                                       self.num_nodes,
-                                      self.ccfg.compression)
+                                      self.ccfg.compression,
+                                      slayout=self.slayout)
         return TrainState(
             params=params, opt=opt,
             lam=jnp.zeros(flat_shape, jnp.float32),
@@ -175,7 +194,8 @@ class ConsensusTrainer:
             ledger = jax.tree_util.tree_map(
                 lambda x: jax.ShapeDtypeStruct(x.shape, x.dtype),
                 init_wire_ledger(self.layout, len(self.offsets),
-                                 self.num_nodes, self.ccfg.compression))
+                                 self.num_nodes, self.ccfg.compression,
+                                 slayout=self.slayout))
         return TrainState(params=params, opt=opt, lam=flat0,
                           theta_bar_prev=flat0, penalty=pen,
                           step=jax.ShapeDtypeStruct((), jnp.int32),
@@ -217,16 +237,18 @@ class ConsensusTrainer:
         pen = jax.tree_util.tree_map(lambda _: rep,
                                      init_penalty_state(self.ccfg.penalty,
                                                         self.num_nodes))
-        # flat buffers: node-sharded rows, replicated within the pod (the
-        # fused kernel consumes whole per-node rows; see docs/consensus_engine)
-        flat_sh = NamedSharding(mesh, P("pod"))
+        # flat buffers: node-sharded rows; with shard_consensus each pod's
+        # row additionally splits over the in-pod axes (one slab per device
+        # — see docs/consensus_engine.md "Sharded layout"), otherwise it is
+        # replicated within the pod (the PR 1 path)
+        flat_sh = NamedSharding(mesh, self._flat_pspec())
         topo_sh = jax.tree_util.tree_map(lambda _: rep,
                                          self.topo_rt.init_state())
         ledger_sh = None
         if self.async_cfg is not None and self.num_nodes > 1:
             # wire rows shard like the stacked payloads in the fused round
             ledger_sh = WireLedger(
-                wires=NamedSharding(mesh, P(None, "pod")), round=rep,
+                wires=NamedSharding(mesh, self._flat_pspec(3)), round=rep,
                 w_prev=rep)
         return TrainState(
             params=params_sh,
@@ -335,6 +357,52 @@ class ConsensusTrainer:
 
         return vloss
 
+    def _flat_pspec(self, ndim: int = 2) -> P:
+        """THE spelling of the flat-buffer sharding, at any rank.
+
+        ``[..., J, total]`` -> ``P(None, ..., 'pod', <in-pod axes>)`` when
+        sharded, ``P(None, ..., 'pod', None)`` (replicated in-pod)
+        otherwise. Every site that shards a flat buffer — state
+        shardings, ledger rows, constraints, the fused-round shard_map
+        specs — derives from here, so the scheme can only change in one
+        place.
+        """
+        lead = (None,) * (ndim - 2)
+        tail = self.inner_axes if self.sharded else None
+        return P(*lead, "pod", tail)
+
+    def _constrain_flat(self, x):
+        """Pin a [J, total]-shaped value to the engine's flat sharding.
+
+        Sharded mode only (a no-op otherwise): keeps GSPMD from choosing
+        in-pod replication for the packed buffers between the pack/encode
+        ops and the manual fused-round region.
+        """
+        if not self.sharded:
+            return x
+        return jax.lax.with_sharding_constraint(
+            x, NamedSharding(self.mesh, self._flat_pspec(x.ndim)))
+
+    def _encode_wire(self, theta_flat):
+        """Flat buffer -> the wire message the permutes move.
+
+        Unsharded: ``FlatLayout.encode_int8`` (scale tail once per node).
+        Sharded: ``ShardedLayout.encode_int8`` — same payload bytes, scale
+        tail replicated per shard so decode stays shard-local.
+        """
+        if self.ccfg.compression != "int8":
+            return self._constrain_flat(theta_flat)
+        if self.sharded:
+            return self._constrain_flat(self.slayout.encode_int8(theta_flat))
+        return self.layout.encode_int8(theta_flat)
+
+    def _decode_wire(self, wire):
+        """Wire message -> (payload [J, total], scales [J, L] | None)."""
+        if self.sharded:
+            payload, scales = self.slayout.split_wire(wire)
+            return self._constrain_flat(payload), scales
+        return self.layout.decode_split(wire)
+
     def _fused_round(self, theta_flat, lam_flat, bar_prev, wires, scales,
                      e_stack, alpha, sym_sum, eta_node,
                      bar_w=None, inv_deg=None, kick_w=None):
@@ -343,7 +411,11 @@ class ConsensusTrainer:
         Manual over ALL mesh axes with nothing but the kernel inside — the
         historical GSPMD-inside-manual miscompile does not apply because the
         region contains no auto-sharded ops. Each device runs the kernel on
-        its pod's node row (replicated across the in-pod axes).
+        its pod's node row: the whole row (replicated across the in-pod
+        axes) by default, or — with ``shard_consensus`` — only its in-pod
+        slab of the flat axis, with the per-shard block->leaf table riding
+        as a traced operand and the blockwise residual partials finished by
+        ONE psum over the in-pod axes.
 
         ``bar_w``/``inv_deg`` (dynamic topology) ride next to e_sym / the
         node scalars: the traced edge gates select the masked kernel.
@@ -353,39 +425,56 @@ class ConsensusTrainer:
         from repro.kernels import ops as kops
 
         lay = self.layout
-        block_leaf = tuple(lay.block_leaf.tolist())
+        sharded = self.sharded
+        inner = self.inner_axes
         masked = bar_w is not None
         kicked = kick_w is not None
         pod = P("pod")
+        flat_spec = self._flat_pspec(2)
+        wires_spec = self._flat_pspec(3)
 
         # node scalars ride as one stacked [3|4, J] SMEM block; the traced
         # edge gates / kick weights (when present) are extra [deg, J]
-        # operands
+        # operands; the sharded path appends its [n_shards, blocks/shard]
+        # block->leaf table, sharded so each device reads its slab's row
         rows = [alpha, sym_sum, eta_node] + ([inv_deg] if masked else [])
         node_sc = jnp.stack(rows, axis=0)
         args = [theta_flat, lam_flat, bar_prev, wires, scales, e_stack] \
             + ([bar_w] if masked else []) + ([kick_w] if kicked else []) \
             + [node_sc]
-        in_specs = (P("pod", None), P("pod", None), P("pod", None),
-                    P(None, "pod", None), P(None, "pod", None),
+        in_specs = (flat_spec, flat_spec, flat_spec,
+                    wires_spec, P(None, "pod", None),
                     P(None, "pod")) \
             + ((P(None, "pod"),) if masked else ()) \
             + ((P(None, "pod"),) if kicked else ()) + (P(None, "pod"),)
+        if sharded:
+            args.append(jnp.asarray(self.slayout.block_leaf_shards,
+                                    jnp.int32))
+            in_specs += (P(inner, None),)
 
         def local(theta, lam, barp, w, s, e, *rest):
             rest = list(rest)
             bw = rest.pop(0) if masked else None
             kw = rest.pop(0) if kicked else None
-            nsc = rest[0]
-            return kops.consensus_round(
+            nsc = rest.pop(0)
+            out = kops.consensus_round(
                 theta, lam, barp, w, s, e, nsc[0], nsc[1], nsc[2],
-                block_leaf=block_leaf, block_size=lay.block_size,
+                block_leaf=(None if sharded
+                            else tuple(lay.block_leaf.tolist())),
+                block_leaf_arr=rest.pop(0)[0] if sharded else None,
+                block_size=lay.block_size,
                 bar_w=bw, inv_deg=nsc[3] if masked else None, kick_w=kw)
+            if sharded:
+                # finish the blockwise residual partials across the slab
+                # grid: ONE psum over the in-pod axes per reduction
+                tn, ln, bar, rsq, ssq = out
+                out = (tn, ln, bar, jax.lax.psum(rsq, inner),
+                       jax.lax.psum(ssq, inner))
+            return out
 
         fn = shd.shard_map_compat(
             local, self.mesh, in_specs=in_specs,
-            out_specs=(P("pod", None), P("pod", None), P("pod", None),
-                       pod, pod))
+            out_specs=(flat_spec, flat_spec, flat_spec, pod, pod))
         return fn(*args)
 
     def consensus_step(self, state: TrainState, probe_batch: Any
@@ -430,8 +519,9 @@ class ConsensusTrainer:
 
         # pack in the params' native float dtype: the uncompressed wire then
         # moves the same bytes/param as the old per-leaf exchange (bf16 = 2B)
-        theta_flat = lay.pack(state.params, dtype=lay.wire_dtype)
-        wire = lay.encode_int8(theta_flat) if int8 else theta_flat
+        theta_flat = self._constrain_flat(
+            lay.pack(state.params, dtype=lay.wire_dtype))
+        wire = self._encode_wire(theta_flat)
 
         eta = state.penalty.eta
         ones = jnp.ones((j, lay.num_leaves), jnp.float32)
@@ -460,7 +550,7 @@ class ConsensusTrainer:
                 # permute and a bf16 wire would cross the DCN at 4 B/param.
                 rolled = jax.lax.optimization_barrier(
                     jnp.roll(wire, -off, axis=0))
-                payload, scales = lay.decode_split(rolled)
+                payload, scales = self._decode_wire(rolled)
                 f_off = vloss(lay.unpack(payload, scales=scales),
                               probe_batch)
                 return payload, (ones if scales is None else scales), f_off
@@ -504,7 +594,7 @@ class ConsensusTrainer:
             scale_rows.append(scales_row)
             e_rows.append(e_sym)
 
-        wires = jnp.stack(payloads)                 # [deg, J, total]
+        wires = self._constrain_flat(jnp.stack(payloads))  # [deg, J, total]
         scales = jnp.stack(scale_rows)              # [deg, J, L]
         e_stack = jnp.stack(e_rows)                 # [deg, J]
 
@@ -684,8 +774,9 @@ class ConsensusTrainer:
         kick_m = jnp.where(newly_stale, ledger.w_prev, 0.0) + topo.kick
 
         f_self = vloss(state.params, probe_batch)               # [J]
-        theta_flat = lay.pack(state.params, dtype=lay.wire_dtype)
-        wire = lay.encode_int8(theta_flat) if int8 else theta_flat
+        theta_flat = self._constrain_flat(
+            lay.pack(state.params, dtype=lay.wire_dtype))
+        wire = self._encode_wire(theta_flat)
 
         ones = jnp.ones((j, lay.num_leaves), jnp.float32)
         sym_sum = jnp.zeros((j,), jnp.float32)
@@ -712,7 +803,7 @@ class ConsensusTrainer:
             # still on the wire; skip the permute entirely this tick
             rolled = jax.lax.cond(arr.any(), _issue, _hold)
             merged = jnp.where(arr[:, None], rolled, held)
-            payload, scales_row = lay.decode_split(merged)
+            payload, scales_row = self._decode_wire(merged)
             g_off = gate_f[idx, jidx]
             k_off = kick_m[idx, jidx]
 
@@ -739,7 +830,7 @@ class ConsensusTrainer:
             kick_rows.append(k_off)
             ledger_rows.append(merged)
 
-        wires = jnp.stack(payloads)                 # [deg, J, total]
+        wires = self._constrain_flat(jnp.stack(payloads))  # [deg, J, total]
         scales = jnp.stack(scale_rows)              # [deg, J, L]
         e_stack = jnp.stack(e_rows)                 # [deg, J]
         bar_w = jnp.stack(w_rows)
@@ -784,8 +875,9 @@ class ConsensusTrainer:
         else:
             kick_next = jnp.zeros_like(topo.kick)
         topo_new = topo_new._replace(kick=kick_next)
-        ledger_new = WireLedger(wires=jnp.stack(ledger_rows),
-                                round=ledger.round + 1, w_prev=w_applied)
+        ledger_new = WireLedger(wires=self._constrain_flat(
+            jnp.stack(ledger_rows)),
+            round=ledger.round + 1, w_prev=w_applied)
 
         new = state._replace(params=params_new, lam=lam_new,
                              theta_bar_prev=bar_new, penalty=penalty_new,
@@ -819,11 +911,15 @@ class ConsensusTrainer:
 
     def _freeze_rows(self, advance: jax.Array, new: TrainState,
                      old: TrainState, *, topo_new, ledger_new) -> TrainState:
-        """Keep non-advancing nodes' rows from ``old`` (async fleet tick).
+        """Keep non-advancing nodes' state from ``old`` (async fleet tick).
 
-        A node mid-compute at the tick deadline runs no prox/dual/penalty
-        update: its params, duals, neighbor mean and penalty ROWS stay put.
-        Its staleness clocks and the shared topology/ledger state still
+        A node mid-compute at the tick deadline runs no prox/dual update:
+        its params, duals and neighbor mean rows stay put. The PENALTY
+        freezes per EDGE instead (``core.penalty.freeze_penalty``): an edge
+        whose other endpoint advanced keeps adapting in BOTH directions, so
+        a frozen node's incident columns and rows stay symmetric — the old
+        whole-row freeze let eta[j, i] run ahead of a frozen eta[i, j].
+        Staleness clocks and the shared topology/ledger state always
         advance — they model the network, not the node's compute.
         """
         adv = advance.astype(bool)
@@ -832,13 +928,7 @@ class ConsensusTrainer:
             sel = adv.reshape((adv.shape[0],) + (1,) * (a.ndim - 1))
             return jnp.where(sel, a, b)
 
-        pen_new, pen_old = new.penalty, old.penalty
-        penalty = pen_new._replace(
-            eta=rows(pen_new.eta, pen_old.eta),
-            cum_tau=rows(pen_new.cum_tau, pen_old.cum_tau),
-            budget=rows(pen_new.budget, pen_old.budget),
-            n_incr=rows(pen_new.n_incr, pen_old.n_incr),
-            f_prev=rows(pen_new.f_prev, pen_old.f_prev))
+        penalty = freeze_penalty(advance, new.penalty, old.penalty)
         return new._replace(
             params=jax.tree_util.tree_map(rows, new.params, old.params),
             lam=rows(new.lam, old.lam),

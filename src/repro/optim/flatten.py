@@ -25,6 +25,15 @@ Layout invariants:
     reductions contribute exactly 0), which is what makes the padded
     reductions equal the masked ones.
 
+Sharding (``FlatLayout.shard`` -> ``ShardedLayout``): the flat axis splits
+on block boundaries into ``n_shards`` equal slabs, one per in-pod device,
+so per-device HBM for the consensus state scales down with the in-pod mesh.
+Each shard gets its own slab of the block->leaf table (global leaf ids, so
+the replicated per-leaf scales index directly) and the int8 wire carries a
+bitcast f32 scale tail PER SHARD — every device encodes/decodes its slab
+with only local bytes, and the neighbor permute still moves one contiguous
+buffer per offset.
+
 All tables are static numpy / Python ints — only buffer contents are traced.
 """
 from __future__ import annotations
@@ -84,11 +93,17 @@ class FlatLayout:
     # ---------------------------------------------------------- factory ----
     @classmethod
     def for_tree(cls, tree: Any, *, block_size: int = 65536,
-                 node_axis: bool = True) -> "FlatLayout":
+                 node_axis: bool = True, shards: int = 1) -> "FlatLayout":
         """Build the table from arrays or ShapeDtypeStructs.
 
         ``node_axis=True`` treats leaves as ``[J, ...]`` stacks and lays out
         the per-node tail shape (the trainer's case).
+
+        ``shards > 1`` additionally aligns the TOTAL to a multiple of
+        ``shards * block_size`` (extra zero padding folded into the last
+        leaf's padded span) so ``shard(shards)`` splits the flat axis into
+        equal block-aligned slabs. ``shards=1`` is byte-identical to the
+        unsharded layout.
         """
         arrs, treedef = jax.tree_util.tree_flatten(tree)
         specs: list[LeafSpec] = []
@@ -101,6 +116,12 @@ class FlatLayout:
             specs.append(LeafSpec(off, size, padded, shape,
                                   jnp.dtype(x.dtype)))
             off += padded
+        if shards > 1 and specs:
+            align = bs * int(shards)
+            total = -(-off // align) * align
+            if total != off:
+                last = specs[-1]
+                specs[-1] = last._replace(padded=last.padded + total - off)
         return cls(treedef, tuple(specs), bs)
 
     @property
@@ -165,7 +186,9 @@ class FlatLayout:
         cols = []
         for lf in self.leaves:
             seg = buf[:, lf.offset:lf.offset + lf.size]
-            amax = jnp.abs(seg.astype(jnp.float32)).max(axis=1)
+            # initial=0.0 is a no-op for non-empty leaves (|x| >= 0) and
+            # keeps empty leaves (size 0) from reducing over nothing
+            amax = jnp.abs(seg.astype(jnp.float32)).max(axis=1, initial=0.0)
             cols.append(jnp.maximum(amax, 1e-12) / 127.0)
         return jnp.stack(cols, axis=1).astype(jnp.float32)
 
@@ -204,5 +227,154 @@ class FlatLayout:
         payload = wire[:, :self.total]
         tail = wire[:, self.total:].reshape(wire.shape[0],
                                             self.num_leaves, 4)
+        scales = jax.lax.bitcast_convert_type(tail, jnp.float32)
+        return payload, scales
+
+    # ----------------------------------------------------------- shard ----
+    def shard(self, n_shards: int) -> "ShardedLayout":
+        """Split the flat axis on block boundaries into ``n_shards`` equal
+        slabs (per-shard layout tables). Build the layout with
+        ``for_tree(..., shards=n_shards)`` so the block count divides."""
+        return ShardedLayout(self, n_shards)
+
+
+class ShardSpec(NamedTuple):
+    """Static layout table for ONE slab of the flat axis."""
+
+    index: int                  # shard id (= device position on in-pod axes)
+    start: int                  # element offset of the slab in the flat axis
+    size: int                   # elements in the slab (uniform across shards)
+    block_leaf: np.ndarray      # [blocks_per_shard] GLOBAL leaf id per block
+    leaf_lo: int                # first leaf id overlapping the slab
+    leaf_hi: int                # last leaf id overlapping the slab (incl.)
+
+
+class ShardedLayout:
+    """Per-shard view of a ``FlatLayout`` for in-pod sharded buffers.
+
+    The flat ``[J, total]`` buffers shard as ``P('pod', <in-pod axes>)``:
+    device s of a pod holds slab ``[start_s : start_s + shard_total]`` of
+    its node's row. Because slab boundaries are block boundaries, each
+    shard owns whole blocks and its slice of the block->leaf table is a
+    valid layout table on its own (global leaf ids, so the replicated
+    ``[.., num_leaves]`` scale rows index it directly).
+
+    Sharded int8 wire format (``encode_int8`` / ``split_wire``): each
+    shard's message is ``[q(slab), bitcast(scales)]`` — the f32 per-leaf
+    scale row rides as an int8 tail on EVERY shard (4*L bytes, noise next
+    to the payload). That makes every per-device slab SELF-CONTAINED: the
+    bytes a device holds (or keeps in its wire-ledger row) are sufficient
+    to dequantize its slab — what a per-device decoder / RDMA mailbox
+    needs on real hardware. The whole per-node wire stays one contiguous
+    ``[J, n_shards * shard_wire_width]`` buffer moved by one
+    collective-permute per graph offset. (In the GSPMD simulation the
+    replicated ``[J, L]`` scale row the kernel and probes consume is
+    assembled from ONE shard's tail — a 4*L-byte in-pod broadcast per
+    offset, noise next to the slab payloads.)
+    """
+
+    def __init__(self, layout: FlatLayout, n_shards: int):
+        n_shards = int(n_shards)
+        if n_shards < 1:
+            raise ValueError(f"n_shards {n_shards} < 1")
+        if layout.num_blocks % n_shards != 0:
+            raise ValueError(
+                f"{layout.num_blocks} blocks not divisible by {n_shards} "
+                f"shards — build the layout with for_tree(..., shards=n)")
+        self.layout = layout
+        self.n_shards = n_shards
+        bps = layout.num_blocks // n_shards
+        self.blocks_per_shard = bps
+        self.shard_total = bps * layout.block_size
+        shards = []
+        for s in range(n_shards):
+            bl = layout.block_leaf[s * bps:(s + 1) * bps]
+            shards.append(ShardSpec(
+                index=s, start=s * self.shard_total, size=self.shard_total,
+                block_leaf=bl,
+                leaf_lo=int(bl[0]) if bl.size else 0,
+                leaf_hi=int(bl[-1]) if bl.size else 0))
+        self.shards = tuple(shards)
+        # [n_shards, blocks_per_shard] — fed to the kernel as a TRACED
+        # operand sharded over the in-pod axes (each device reads its row)
+        self.block_leaf_shards = (
+            np.stack([s.block_leaf for s in shards])
+            if shards and bps else np.zeros((n_shards, bps), np.int32))
+
+    # ------------------------------------------------------- wire widths ----
+    def wire_width(self, compression: str) -> int:
+        """Elements in ONE shard's wire message."""
+        if compression == "int8":
+            return self.shard_total + 4 * self.layout.num_leaves
+        return self.shard_total
+
+    def wire_row_bytes(self, compression: str) -> int:
+        """Bytes of ONE shard's wire message — the per-device slab a
+        permute moves and a ledger row holds. The single source of truth
+        for per-device sharded wire accounting (mirrors
+        ``FlatLayout.wire_bytes``'s role for the unsharded row)."""
+        if compression == "int8":
+            return self.wire_width("int8")
+        return self.shard_total * jnp.dtype(self.layout.wire_dtype).itemsize
+
+    def wire_bytes(self, compression: str) -> int:
+        """Bytes per node moved by ONE graph-offset permute (all shards).
+
+        The int8 wire pays the scale tail once PER SHARD (self-contained
+        slabs) instead of once per node.
+        """
+        return self.n_shards * self.wire_row_bytes(compression)
+
+    # ------------------------------------------------------- wire codec ----
+    def encode_int8(self, buf: jax.Array) -> jax.Array:
+        """f32 [J, total] -> sharded int8 wire [J, n_shards * shard_w].
+
+        The quantized payload is IDENTICAL to ``FlatLayout.encode_int8``
+        (same per-(node, leaf) absmax scales — max reductions are exact, so
+        a cross-shard leaf quantizes the same bytes); only the placement of
+        the scale tail differs: bitcast and replicated per shard. Apart
+        from the per-leaf absmax (an in-pod max-reduce of the [J, L] scale
+        row — leaves cross shard boundaries), every op is
+        elementwise/reshape on the slab grid, so under a
+        ``P('pod', inner)`` sharding constraint each device quantizes and
+        lays out only its own slab.
+        """
+        lay = self.layout
+        j = buf.shape[0]
+        # per-leaf absmax spans shard boundaries: under GSPMD this is an
+        # in-pod max-reduce of the [J, L] scale row per encode (max is
+        # exact, so the scales — and the payload — stay bit-identical to
+        # the unsharded encode); everything downstream of the scales is
+        # elementwise/reshape on the slab grid, i.e. slab-local
+        scales = lay.leaf_scales(buf)                      # [J, L]
+        q = jnp.clip(jnp.round(buf / lay.scale_vector(scales)),
+                     -127, 127).astype(jnp.int8)
+        qr = q.reshape(j, self.n_shards, self.shard_total)
+        tail = jax.lax.bitcast_convert_type(scales, jnp.int8)  # [J, L, 4]
+        tails = jnp.broadcast_to(tail.reshape(j, 1, -1),
+                                 (j, self.n_shards, 4 * lay.num_leaves))
+        wire = jnp.concatenate([qr, tails], axis=2)
+        return wire.reshape(j, self.n_shards * self.wire_width("int8"))
+
+    def split_wire(self, wire: jax.Array
+                   ) -> tuple[jax.Array, jax.Array | None]:
+        """Sharded wire -> (payload [J, total], scales [J, L] | None).
+
+        The payload peel is elementwise on the slab grid (each device
+        slices its own slab); ``scales`` is read from shard 0's tail —
+        the per-shard copies are identical, so under GSPMD this is one
+        4*L-byte in-pod broadcast (see the class docstring for why the
+        tails are still replicated per shard). For an uncompressed
+        (float) wire — which carries no tails — returns ``(wire, None)``
+        untouched, like ``FlatLayout.decode_split``.
+        """
+        if wire.dtype != jnp.int8:
+            return wire, None
+        lay = self.layout
+        j = wire.shape[0]
+        w = self.wire_width("int8")
+        rows = wire.reshape(j, self.n_shards, w)
+        payload = rows[:, :, :self.shard_total].reshape(j, lay.total)
+        tail = rows[:, 0, self.shard_total:].reshape(j, lay.num_leaves, 4)
         scales = jax.lax.bitcast_convert_type(tail, jnp.float32)
         return payload, scales

@@ -26,3 +26,34 @@ def draw_shape(rng, *, min_dim=1, max_dim=64, ndims=2) -> tuple[int, ...]:
 
 def draw_topology(rng, j: int) -> str:
     return str(rng.choice(["complete", "ring", "cluster", "chain", "star"]))
+
+
+def draw_param_tree(rng, *, j: int | None = None, max_leaves: int = 6,
+                    max_elems: int = 2000, allow_empty: bool = True):
+    """Random FlatLayout-shaped pytree: odd leaf sizes, mixed bf16/f32
+    dtypes, scalar leaves and (optionally) empty leaves.
+
+    Returns ``(tree, j)`` — a list of ``[j, ...]`` float arrays. Sizes are
+    drawn odd-heavy so block-alignment padding is always exercised.
+    """
+    import jax.numpy as jnp
+
+    j = int(rng.integers(1, 5)) if j is None else j
+    nleaves = int(rng.integers(1, max_leaves + 1))
+    dtypes = [np.float32, np.dtype(jnp.bfloat16)]
+    tree = []
+    for _ in range(nleaves):
+        kind = rng.random()
+        if kind < 0.15:
+            shape = ()                                 # scalar leaf
+        elif allow_empty and kind < 0.25:
+            shape = (0,)                               # empty leaf
+        else:
+            ndims = int(rng.integers(1, 3))
+            dims = [int(rng.integers(1, max_elems ** (1 / ndims)) * 2 - 1)
+                    for _ in range(ndims)]             # odd-heavy sizes
+            shape = tuple(max(1, d) for d in dims)
+        dt = dtypes[int(rng.integers(0, len(dtypes)))]
+        x = rng.normal(size=(j,) + shape).astype(np.float32)
+        tree.append(jnp.asarray(x).astype(dt))
+    return tree, j

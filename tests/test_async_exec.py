@@ -150,20 +150,36 @@ data = SyntheticTokens(DataConfig(vocab=cfg.vocab, seq_len=32,
 probe = data.batch(0, probe=True)
 
 def make(async_cfg=None, dyn=None, fused=True, compression="none",
-         topology="ring"):
+         topology="ring", sharded=False, penalty=None):
     return ConsensusTrainer(
         model, mesh, adamw=AdamWConfig(lr=1e-2),
         consensus=ConsensusConfig(
-            penalty=PenaltyConfig(scheme="nap", eta0=0.1),
+            penalty=penalty or PenaltyConfig(scheme="nap", eta0=0.1),
             topology=topology, local_steps=1, use_fused_kernel=fused,
             compression=compression,
             dyn_topology=dyn or TopologyConfig(),
-            async_exec=async_cfg))
+            async_exec=async_cfg, shard_consensus=sharded))
 
 def flat(st):
     return ([np.asarray(x) for x in jax.tree_util.tree_leaves(st.params)]
             + [np.asarray(st.lam), np.asarray(st.theta_bar_prev),
                np.asarray(st.penalty.eta)])
+
+def flatu(tr, st):
+    # layout-independent view (the sharded layout pads the flat total):
+    # params + per-leaf lam/bar views + penalties
+    return ([np.asarray(x, np.float32)
+             for x in jax.tree_util.tree_leaves(st.params)]
+            + [np.asarray(x) for x in jax.tree_util.tree_leaves(
+                tr.layout.unpack(st.lam))]
+            + [np.asarray(x) for x in jax.tree_util.tree_leaves(
+                tr.layout.unpack(st.theta_bar_prev))]
+            + [np.asarray(st.penalty.eta)])
+
+def fresh_state(tr):
+    st = tr.init_state(jax.random.PRNGKey(0))
+    st, _ = jax.jit(tr.train_step)(st, data.batch(0))
+    return st
 
 base = make()
 state0 = base.init_state(jax.random.PRNGKey(0))
@@ -185,6 +201,23 @@ out["n0_bit_identical"] = all(
     np.array_equal(a, b) for a, b in zip(flat(st_sync), flat(st0)))
 out["n0_metrics_equal"] = all(
     float(m_sync[k]) == float(m0[k]) for k in m_sync)
+
+# --- 1b. SHARDED max_staleness=0 through the executor == sharded sync ----
+# (the max_staleness=0 == sync invariant re-established on the slab path)
+trss = make(sharded=True)
+st_ss = fresh_state(trss)
+conss = jax.jit(trss.consensus_step)
+st_ss, m_ss = conss(st_ss, probe)
+st_ss, m_ss = conss(st_ss, probe)
+tr0s = make(async_cfg=AsyncConfig(max_staleness=0), sharded=True)
+st0s = fresh_state(tr0s)
+ex0s = AsyncExecutor(tr0s)
+st0s, m0s = ex0s.consensus_round(st0s, probe)
+st0s, m0s = ex0s.consensus_round(st0s, probe)
+out["n0_sharded_bit_identical"] = all(
+    np.array_equal(a, b) for a, b in zip(flat(st_ss), flat(st0s)))
+out["n0_sharded_metrics_equal"] = all(
+    float(m_ss[k]) == float(m0s[k]) for k in m_ss)
 
 # --- 2. staleness round: fused == reference on gating + revival ---------
 # deterministic arrival schedule, N=1, int8 wire: sender 0's payloads land
@@ -225,7 +258,27 @@ for compression in ("none", "int8"):
                 k = np.asarray(st.topo.kick)
                 out["kick_double_absorb"] = float(
                     np.abs(k[:, 0]).sum() + np.abs(k[0, :]).sum())
-        stats[fused] = (flat(st), ms, np.asarray(st.topo.age))
+        stats[fused] = (flat(st), ms, np.asarray(st.topo.age),
+                        flatu(tr, st))
+    # sharded stale round: same arrival schedule through the slab engine
+    # (per-shard ledger rows, in-round kick absorption from local bytes)
+    trs = make(async_cfg=acfg, dyn=dyn, fused=True,
+               compression=compression, topology="complete", sharded=True)
+    sts = fresh_state(trs)
+    steps_ = jax.jit(trs.consensus_step_async)
+    for t in range(5):
+        sts, m_s = steps_(sts, probe, arrivals_for(trs, t), None)
+    out[f"stale_sharded_err_{compression}"] = max(
+        float(np.max(np.abs(a - b)))
+        for a, b in zip(flatu(trs, sts), stats[True][3]))
+    if compression == "int8":
+        # per-shard ledger rows: each device's slab holds ONE shard's
+        # wire width (payload slab + its own scale tail), not the row
+        out["ledger_slab_widths"] = sorted(
+            {int(s.data.shape[-1])
+             for s in sts.ledger.wires.addressable_shards})
+        out["ledger_slab_expected"] = trs.slayout.wire_width("int8")
+        out["ledger_row_width"] = int(sts.ledger.wires.shape[-1])
     # "equal at wire precision": params are STORED bf16, so the two f32
     # paths legitimately differ by single bf16 ulps (rtol 1e-2 ~ 2-3
     # ulps); atol covers near-zero duals and, for int8, one LSB of the
@@ -275,6 +328,33 @@ out["sched_kick_close"] = bool(all(
 out["sched_kick_fused_vs_ref_err"] = max(
     float(np.max(np.abs(a - b)))
     for a, b in zip(kflat[True], kflat[False]))
+
+# --- 4. budget-gated topology: sharded == unsharded on gated rounds -----
+# force gating: a zero initial budget exhausts every edge immediately and
+# a huge gate_tol drops the residual guard, so the budget scheduler gates
+# all non-backbone chords of the COMPLETE graph at the end of round 1 and
+# round 2 absorbs their parked kicks — the budget-gated pin of the ISSUE.
+bdyn = TopologyConfig(scheduler="budget", gate_tol=1e9)
+bpen = PenaltyConfig(scheme="nap", eta0=0.1, budget_init=0.0)
+for compression in ("none", "int8"):
+    bflat = {}
+    for sharded in (True, False):
+        trb = make(dyn=bdyn, compression=compression, topology="complete",
+                   sharded=sharded, penalty=bpen)
+        stb = fresh_state(trb)
+        stepb = jax.jit(trb.consensus_step)
+        stb, mb = stepb(stb, probe)     # gates chords, parks their kicks
+        if sharded:
+            out[f"budget_kick_pending_{compression}"] = bool(
+                np.asarray(stb.topo.kick).sum() > 0)
+        stb, mb = stepb(stb, probe)     # absorbs kicks from this wire
+        if sharded:
+            out[f"budget_gated_active_{compression}"] = float(
+                mb["active_edges"])
+        bflat[sharded] = flatu(trb, stb)
+    out[f"budget_sharded_err_{compression}"] = max(
+        float(np.max(np.abs(a - b)))
+        for a, b in zip(bflat[True], bflat[False]))
 print("RESULT " + json.dumps(out))
 """
 
@@ -294,6 +374,44 @@ def engine_results():
 def test_max_staleness_zero_bit_identical_to_sync(engine_results):
     assert engine_results["n0_bit_identical"] is True
     assert engine_results["n0_metrics_equal"] is True
+
+
+def test_sharded_max_staleness_zero_bit_identical_to_sharded_sync(
+        engine_results):
+    """The max_staleness=0 == sync invariant re-established on the sharded
+    engine (slab buffers, per-shard ledger): bit-identical incl. metrics."""
+    assert engine_results["n0_sharded_bit_identical"] is True
+    assert engine_results["n0_sharded_metrics_equal"] is True
+
+
+def test_sharded_stale_round_matches_unsharded(engine_results):
+    """Satellite pin: the sharded stale-topology round (gating, revival,
+    in-round zero-kick from per-shard ledger rows) == the unsharded fused
+    round — the per-element math is identical, so the bound is f32
+    exactness, not just wire precision."""
+    assert engine_results["stale_sharded_err_none"] <= 1e-5, engine_results
+    assert engine_results["stale_sharded_err_int8"] <= 1e-5, engine_results
+
+
+def test_sharded_ledger_rows_are_per_shard(engine_results):
+    """Each device's ledger slab holds one shard's wire width (payload
+    slab + its own int8 scale tail) — staleness absorption reads only
+    local bytes."""
+    assert engine_results["ledger_slab_widths"] == \
+        [engine_results["ledger_slab_expected"]], engine_results
+    assert engine_results["ledger_row_width"] > \
+        engine_results["ledger_slab_expected"]      # guard: really sharded
+
+
+def test_sharded_budget_gated_matches_unsharded(engine_results):
+    """Satellite pin: budget-gated topology (scheduler gates the complete
+    graph's chords, parks kicks, absorbs them next round) sharded ==
+    unsharded for both compressions."""
+    for comp in ("none", "int8"):
+        assert engine_results[f"budget_kick_pending_{comp}"] is True
+        assert engine_results[f"budget_gated_active_{comp}"] < 1.0
+        assert engine_results[f"budget_sharded_err_{comp}"] <= 1e-5, \
+            engine_results
 
 
 def test_stale_round_fused_matches_reference(engine_results):

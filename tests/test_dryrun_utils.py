@@ -54,6 +54,44 @@ def test_roofline_terms_dominance():
     assert r["dominant"] == "collective"
 
 
+def test_consensus_state_hbm_shrinks_by_inpod_size():
+    """ISSUE acceptance (analytic half): per-device consensus-state HBM
+    (lam + theta_bar_prev + wire/ledger rows) shrinks by ~the in-pod axis
+    size on a 2-pod x 4-device mesh. The in-pod grid of that mesh is 4
+    devices, so ``n_shards=4``; the only non-dividing term is the int8
+    wire's 4*num_leaves scale tail, carried once per shard."""
+    import jax.numpy as jnp
+    from repro.launch.dryrun import consensus_state_bytes
+    from repro.optim import flatten
+
+    tree = {"w": jnp.zeros((4096, 64), jnp.float32),
+            "b": jnp.zeros((1000,), jnp.float32),
+            "e": jnp.zeros((3, 999), jnp.float32)}
+    n_shards = 4                                  # 2-pod x 4-device mesh
+    lay = flatten.FlatLayout.for_tree(tree, block_size=128,
+                                      node_axis=False, shards=n_shards)
+    for compression in ("none", "int8"):
+        full = consensus_state_bytes(lay, deg=2, compression=compression,
+                                     n_shards=1, with_ledger=True)
+        slab = consensus_state_bytes(lay, deg=2, compression=compression,
+                                     n_shards=n_shards, with_ledger=True)
+        assert set(slab) == {"lam", "theta_bar_prev", "wire_rows",
+                             "ledger_rows", "total"}
+        # the flat f32 buffers divide exactly
+        assert slab["lam"] * n_shards == full["lam"]
+        assert slab["theta_bar_prev"] * n_shards == full["theta_bar_prev"]
+        # the wire/ledger rows divide up to the per-shard scale tails
+        ratio = full["total"] / slab["total"]
+        assert 0.9 * n_shards <= ratio <= n_shards, (compression, ratio)
+        if compression == "none":
+            assert ratio == n_shards
+        else:
+            # exact overhead: (n_shards - 1) extra 4*L tails per offset
+            # row, for wire and ledger rows
+            extra = 2 * 2 * 4 * lay.num_leaves * (n_shards - 1)
+            assert slab["total"] * n_shards == full["total"] + extra
+
+
 def test_model_flops_yardstick():
     from repro.configs import SHAPES, get_config
     from repro.launch.dryrun import model_flops

@@ -1,0 +1,183 @@
+"""Property-test harness for the shard-aware flat layout (repro.optim.flatten).
+
+Randomized pytrees (odd leaf sizes, mixed bf16/f32 dtypes, empty and scalar
+leaves, block sizes 128..64k) drive four pinned properties:
+
+  * pack -> unpack round-trips exactly, with zero-filled padding;
+  * ``shard(n)`` slab tables reassemble to the full layout table (same
+    blocks, same leaf ownership, contiguous block-aligned slabs);
+  * shard-local int8 encode/decode == full-buffer encode/decode — the
+    sharded wire's payload bytes are IDENTICAL to ``encode_int8``'s and
+    every shard decodes with only its own slab bytes;
+  * per-shard wire widths account exactly for the payload + per-shard
+    bitcast scale tails.
+"""
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.optim import flatten
+
+from proptest import draw_param_tree, sweep
+
+
+def _layout_for(tree, bs, shards):
+    return flatten.FlatLayout.for_tree(tree, block_size=bs, shards=shards)
+
+
+def _draw_case(rng):
+    tree, j = draw_param_tree(rng)
+    bs = int(rng.choice([128, 256, 1024, 65536]))
+    n_shards = int(rng.choice([1, 2, 4, 8]))
+    return tree, j, bs, n_shards
+
+
+# ------------------------------------------------------------ round trip ----
+def test_pack_unpack_roundtrip_randomized():
+    def prop(rng, i):
+        tree, j, bs, n_shards = _draw_case(rng)
+        lay = _layout_for(tree, bs, n_shards)
+        buf = lay.pack(tree)
+        assert buf.shape == (j, lay.total)
+        back = lay.unpack(buf)
+        for a, b in zip(tree, back):
+            assert b.dtype == a.dtype
+            np.testing.assert_array_equal(
+                np.asarray(a, np.float32), np.asarray(b, np.float32))
+
+    sweep(prop, cases=20, seed=31)
+
+
+def test_padding_stays_zero_randomized():
+    def prop(rng, i):
+        tree, j, bs, n_shards = _draw_case(rng)
+        lay = _layout_for(tree, bs, n_shards)
+        buf = np.asarray(lay.pack(tree))
+        pad_mask = np.ones((lay.total,), bool)
+        for lf in lay.leaves:
+            pad_mask[lf.offset:lf.offset + lf.size] = False
+        assert (buf[:, pad_mask] == 0).all()
+        # shard alignment never loses elements: padded total covers every
+        # true element and divides the shard grid
+        assert lay.total % (bs * n_shards) == 0
+        assert sum(lf.size for lf in lay.leaves) <= lay.total
+
+    sweep(prop, cases=20, seed=32)
+
+
+# ----------------------------------------------------------- shard tables ----
+def test_shard_tables_reassemble_to_full_table():
+    def prop(rng, i):
+        tree, j, bs, n_shards = _draw_case(rng)
+        lay = _layout_for(tree, bs, n_shards)
+        slay = lay.shard(n_shards)
+        assert slay.n_shards == n_shards
+        assert slay.shard_total * n_shards == lay.total
+        assert slay.shard_total % bs == 0
+        # slabs tile the flat axis contiguously on block boundaries
+        starts = [s.start for s in slay.shards]
+        assert starts == [k * slay.shard_total for k in range(n_shards)]
+        # concatenated per-shard tables == the full block->leaf table
+        reassembled = np.concatenate(
+            [s.block_leaf for s in slay.shards]) if slay.blocks_per_shard \
+            else np.zeros((0,), np.int32)
+        np.testing.assert_array_equal(reassembled, lay.block_leaf)
+        # each shard's leaf range is the contiguous span its blocks cover
+        for s in slay.shards:
+            if s.block_leaf.size:
+                assert s.leaf_lo == int(s.block_leaf[0])
+                assert s.leaf_hi == int(s.block_leaf[-1])
+                assert s.leaf_lo <= s.leaf_hi < lay.num_leaves
+
+    sweep(prop, cases=20, seed=33)
+
+
+def test_shard_requires_divisible_blocks():
+    tree = [jnp.zeros((2, 300), jnp.float32)]
+    lay = flatten.FlatLayout.for_tree(tree, block_size=128)  # 3 blocks
+    with pytest.raises(ValueError):
+        lay.shard(2)
+    lay2 = flatten.FlatLayout.for_tree(tree, block_size=128, shards=2)
+    assert lay2.num_blocks % 2 == 0
+    lay2.shard(2)
+
+
+# ------------------------------------------------------- sharded int8 wire ----
+def test_shard_local_int8_encode_matches_full_buffer():
+    def prop(rng, i):
+        tree, j, bs, n_shards = _draw_case(rng)
+        lay = _layout_for(tree, bs, n_shards)
+        slay = lay.shard(n_shards)
+        buf = lay.pack(tree)
+
+        full_wire = lay.encode_int8(buf)
+        full_payload, full_scales = lay.decode_split(full_wire)
+        sh_wire = slay.encode_int8(buf)
+        assert sh_wire.dtype == jnp.int8
+        assert sh_wire.shape == (j, n_shards * slay.wire_width("int8"))
+
+        # payload bytes identical to the full-buffer encode, per shard
+        w = slay.wire_width("int8")
+        rows = np.asarray(sh_wire).reshape(j, n_shards, w)
+        for s in slay.shards:
+            np.testing.assert_array_equal(
+                rows[:, s.index, :slay.shard_total],
+                np.asarray(full_payload)[:, s.start:s.start + s.size])
+            # every shard's tail carries the exact full-buffer scales —
+            # decode needs no other shard's bytes
+            tail = jnp.asarray(rows[:, s.index, slay.shard_total:]
+                               .reshape(j, lay.num_leaves, 4))
+            np.testing.assert_array_equal(
+                np.asarray(jax.lax.bitcast_convert_type(tail, jnp.float32)),
+                np.asarray(full_scales))
+
+        # split_wire reassembles the identical (payload, scales) pair
+        payload, scales = slay.split_wire(sh_wire)
+        np.testing.assert_array_equal(np.asarray(payload),
+                                      np.asarray(full_payload))
+        np.testing.assert_array_equal(np.asarray(scales),
+                                      np.asarray(full_scales))
+        # float wire carries no tails and passes through untouched
+        p2, s2 = slay.split_wire(buf)
+        assert s2 is None and p2 is buf
+
+    sweep(prop, cases=15, seed=34)
+
+
+def test_sharded_wire_width_accounting():
+    def prop(rng, i):
+        tree, j, bs, n_shards = _draw_case(rng)
+        lay = _layout_for(tree, bs, n_shards)
+        slay = lay.shard(n_shards)
+        assert slay.wire_width("none") == slay.shard_total
+        assert slay.wire_width("int8") == \
+            slay.shard_total + 4 * lay.num_leaves
+        # int8: full payload + one scale tail PER shard; float: same bytes
+        # as the unsharded wire
+        assert slay.wire_bytes("int8") == \
+            lay.total + 4 * lay.num_leaves * n_shards
+        assert slay.wire_bytes("none") == \
+            lay.total * jnp.dtype(lay.wire_dtype).itemsize
+
+    sweep(prop, cases=20, seed=35)
+
+
+def test_empty_and_scalar_leaves_survive_int8():
+    tree = [jnp.zeros((3, 0), jnp.float32),            # empty
+            jnp.asarray(np.random.default_rng(0).normal(size=(3,))
+                        .astype(np.float32)),          # scalar per node
+            jnp.asarray(np.random.default_rng(1).normal(size=(3, 257))
+                        .astype(np.float32))]
+    lay = flatten.FlatLayout.for_tree(tree, block_size=128, shards=2)
+    buf = lay.pack(tree)
+    payload, scales = lay.decode_split(lay.encode_int8(buf))
+    back = lay.unpack(payload, scales=scales)
+    assert back[0].shape == (3, 0)
+    amax = float(np.abs(np.asarray(tree[2])).max())
+    np.testing.assert_allclose(np.asarray(back[2]), np.asarray(tree[2]),
+                               atol=amax / 127.0 + 1e-6)
+    slay = lay.shard(2)
+    p2, s2 = slay.split_wire(slay.encode_int8(buf))
+    np.testing.assert_array_equal(np.asarray(p2), np.asarray(payload))
+    np.testing.assert_array_equal(np.asarray(s2), np.asarray(scales))

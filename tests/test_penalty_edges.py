@@ -10,7 +10,7 @@ import numpy as np
 import pytest
 
 from repro.core.penalty import (PenaltyConfig, budget_exhausted,
-                                compute_tau, effective_eta,
+                                compute_tau, effective_eta, freeze_penalty,
                                 init_penalty_state, staleness_damping,
                                 update_penalty)
 
@@ -93,6 +93,65 @@ def test_staleness_damping_properties():
     assert (np.diff(d) < 0).all()                   # strictly decreasing
     assert (d > 0).all()
     assert np.asarray(staleness_damping(age, 0.0)).tolist() == [1.0] * 5
+
+
+# ------------------------------------------------- per-edge freezing ----
+def _states_for_freeze(j=4):
+    cfg = PenaltyConfig(scheme="nap", eta0=1.0)
+    old = init_penalty_state(cfg, j)
+    rng = np.random.default_rng(7)
+    new = old._replace(
+        eta=jnp.asarray(rng.uniform(1.5, 3.0, (j, j)).astype(np.float32)),
+        cum_tau=jnp.asarray(rng.uniform(0, 1, (j, j)).astype(np.float32)),
+        budget=jnp.asarray(rng.uniform(1, 2, (j, j)).astype(np.float32)),
+        n_incr=jnp.asarray(rng.integers(0, 3, (j, j)).astype(np.int32)),
+        f_prev=jnp.asarray(rng.uniform(0, 1, (j,)).astype(np.float32)),
+        t=old.t + 1)
+    return old, new
+
+
+def test_freeze_penalty_is_per_edge_and_symmetric():
+    """Regression for the ROADMAP row-freeze asymmetry: node 0 frozen,
+    nodes 1..3 advancing. The old whole-ROW freeze kept eta[0, j] at the
+    old value while eta[j, 0] adapted — the applied symmetrized weight
+    0.5*(eta_ij + eta_ji) then disagreed with both endpoints' view of the
+    edge. Per-edge freezing updates BOTH directions of an edge whenever
+    either endpoint advanced; this test FAILS on the row-freeze behavior
+    (eta[0, 1] would stay old)."""
+    old, new = _states_for_freeze()
+    adv = jnp.asarray([False, True, True, True])
+    out = freeze_penalty(adv, new, old)
+    eta = np.asarray(out.eta)
+    # the frozen node's edges to advancing neighbors took the NEW values
+    # in BOTH directions (row-freeze keeps eta[0, 1:] old -> this fails)
+    np.testing.assert_array_equal(eta[0, 1:], np.asarray(new.eta)[0, 1:])
+    np.testing.assert_array_equal(eta[1:, 0], np.asarray(new.eta)[1:, 0])
+    # update-cadence symmetry: both directions of every edge came from the
+    # same state (old or new), so cadence never desynchronizes
+    took_new = eta == np.asarray(new.eta)
+    np.testing.assert_array_equal(took_new, took_new.T)
+    # per-node probe memory still freezes with the node
+    f_prev = np.asarray(out.f_prev)
+    assert f_prev[0] == np.asarray(old.f_prev)[0]
+    np.testing.assert_array_equal(f_prev[1:], np.asarray(new.f_prev)[1:])
+
+
+def test_freeze_penalty_both_endpoints_frozen_keeps_old():
+    old, new = _states_for_freeze()
+    adv = jnp.asarray([False, False, True, True])
+    out = freeze_penalty(adv, new, old)
+    # the frozen-frozen edge (0, 1) stays at OLD values, both directions
+    assert float(out.eta[0, 1]) == float(old.eta[0, 1])
+    assert float(out.eta[1, 0]) == float(old.eta[1, 0])
+    assert float(out.cum_tau[0, 1]) == float(old.cum_tau[0, 1])
+    assert int(out.n_incr[1, 0]) == int(old.n_incr[1, 0])
+    # everyone advancing == plain new state; no one advancing == old edges
+    all_new = freeze_penalty(jnp.ones(4, bool), new, old)
+    np.testing.assert_array_equal(np.asarray(all_new.eta),
+                                  np.asarray(new.eta))
+    none_new = freeze_penalty(jnp.zeros(4, bool), new, old)
+    np.testing.assert_array_equal(np.asarray(none_new.eta),
+                                  np.asarray(old.eta))
 
 
 # ------------------------------------------------------ clip extremes ----
