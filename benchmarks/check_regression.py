@@ -1,0 +1,197 @@
+"""Benchmark-regression gate: fresh results vs the committed baselines.
+
+Compares freshly written ``benchmarks/results/BENCH_*.json`` artifacts
+against the repo-root committed baselines (``BENCH_consensus.json``,
+``BENCH_topology.json``, ``BENCH_async.json``) with per-metric tolerances,
+and exits non-zero when a metric regresses. CI runs it as a step after the
+smoke cells; the single report it writes
+(``benchmarks/results/regression_report.json``) embeds BOTH the baseline
+and the fresh values per checked metric — one diffable artifact to upload
+on failure.
+
+Tolerance model (per metric, declared in ``CHECKS`` below):
+
+  * ``ratio``  — fresh may exceed baseline by a multiplicative factor
+                 (wall-clock metrics get generous factors: CI machines are
+                 noisy; iteration counts get tight ones: they are seeded).
+  * ``floor``  — fresh must reach at least ``factor * baseline`` (speedups).
+  * ``abs``    — fresh may exceed baseline by an additive slack (fractions).
+  * ``exact``  — fresh must equal baseline (byte accounting: wire bytes per
+                 round can only change through a deliberate codec/layout
+                 change, which must update the committed baseline).
+
+Rows inside a baseline are matched by key fields (topology/scheduler,
+wire_frac, round tag); rows present only on one side are reported but not
+failed — smoke grids legitimately run a subset of the full baseline grid.
+Missing fresh artifacts are skipped (reported), so the gate only checks
+what the preceding CI cells actually produced.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import sys
+
+from benchmarks.common import REPO_ROOT, RESULTS_DIR
+
+# metric -> (kind, factor) ; kind in {"ratio", "floor", "abs", "exact"}
+_CONSENSUS_ROUND = {
+    # wall-clock only catches collapses: a loaded 2-core runner has been
+    # observed 2.5x over the committed baseline with no real regression
+    "round_ms": ("ratio", 4.0),
+    "local_step_ms": ("ratio", 4.0),
+    "wire_bytes_per_round": ("exact", 0),
+}
+CHECKS = {
+    "BENCH_consensus.json": {
+        "rows_key": "rounds",            # dict tag -> metrics
+        "metrics": _CONSENSUS_ROUND,
+        "scalars": {"fused_vs_unfused": ("ratio", 1.5)},
+    },
+    "BENCH_topology.json": {
+        "rows_key": "rows",
+        "match": ("topology", "scheduler"),
+        "metrics": {
+            "iters_median": ("ratio", 1.35),
+            "active_final": ("abs", 0.2),
+            "err_median": ("abs", 5e-3),
+        },
+        "scalars": {},
+    },
+    "BENCH_async.json": {
+        "rows_key": "rows",
+        "match": ("wire_frac",),
+        "metrics": {
+            # generous floor: smoke runs use a different drop_frac /
+            # round budget than the committed full-run baseline, and
+            # speedup is a ratio of SMALL integer tick counts (one extra
+            # tick swings it ~15%). The benchmark itself already asserts
+            # the >=1.3x functional bar; the gate only catches collapses.
+            "speedup": ("floor", 0.6),
+            "ticks_async": ("ratio", 1.35),
+        },
+        "scalars": {"objective_drift": ("abs", 0.02)},
+    },
+}
+
+
+def _check_metric(name, kind, factor, base, fresh):
+    """Returns (ok, detail dict)."""
+    ok = True
+    if kind == "ratio":
+        ok = fresh <= base * factor + 1e-12
+    elif kind == "floor":
+        ok = fresh >= base * factor - 1e-12
+    elif kind == "abs":
+        ok = fresh <= base + factor + 1e-12
+    elif kind == "exact":
+        ok = fresh == base
+    else:
+        raise ValueError(f"unknown tolerance kind {kind!r} for {name}")
+    return ok, {"metric": name, "kind": kind, "factor": factor,
+                "baseline": base, "fresh": fresh, "ok": bool(ok)}
+
+
+def _iter_rows(doc, spec):
+    """Yield (row_id, row_dict) for a baseline/fresh document."""
+    rows = doc.get(spec["rows_key"], {})
+    if isinstance(rows, dict):                   # consensus: tag -> metrics
+        for tag, row in rows.items():
+            yield tag, row
+    else:                                        # list rows matched by key
+        for row in rows:
+            yield tuple(row.get(k) for k in spec["match"]), row
+
+
+def check_file(name, *, baseline_dir, results_dir) -> dict:
+    """Compare one fresh artifact against its committed baseline."""
+    spec = CHECKS[name]
+    base_path = os.path.join(baseline_dir, name)
+    fresh_path = os.path.join(results_dir, name)
+    out = {"name": name, "baseline": base_path, "fresh": fresh_path,
+           "checks": [], "unmatched_rows": [], "status": "ok"}
+    if not os.path.exists(fresh_path):
+        out["status"] = "skipped (no fresh artifact)"
+        return out
+    if not os.path.exists(base_path):
+        out["status"] = "skipped (no committed baseline)"
+        return out
+    with open(base_path) as f:
+        base_doc = json.load(f)
+    with open(fresh_path) as f:
+        fresh_doc = json.load(f)
+    out["baseline_doc"] = base_doc        # both sides ride in the report:
+    out["fresh_doc"] = fresh_doc          # ONE diffable failure artifact
+
+    base_rows = dict(_iter_rows(base_doc, spec))
+    fresh_rows = dict(_iter_rows(fresh_doc, spec))
+    for rid, fresh_row in fresh_rows.items():
+        base_row = base_rows.get(rid)
+        if base_row is None:
+            out["unmatched_rows"].append(str(rid))
+            continue
+        for metric, (kind, factor) in spec["metrics"].items():
+            if metric not in fresh_row or metric not in base_row:
+                continue
+            ok, detail = _check_metric(metric, kind, factor,
+                                       base_row[metric], fresh_row[metric])
+            detail["row"] = str(rid)
+            out["checks"].append(detail)
+    for metric, (kind, factor) in spec["scalars"].items():
+        if metric in fresh_doc and metric in base_doc:
+            ok, detail = _check_metric(metric, kind, factor,
+                                       base_doc[metric], fresh_doc[metric])
+            detail["row"] = "<top-level>"
+            out["checks"].append(detail)
+    if any(not c["ok"] for c in out["checks"]):
+        out["status"] = "REGRESSION"
+    return out
+
+
+def run(baseline_dir: str = REPO_ROOT, results_dir: str = RESULTS_DIR,
+        names=None) -> dict:
+    reports = [check_file(n, baseline_dir=baseline_dir,
+                          results_dir=results_dir)
+               for n in (names or sorted(CHECKS))]
+    n_checked = sum(len(r["checks"]) for r in reports)
+    failed = [c for r in reports for c in r["checks"] if not c["ok"]]
+    return {"reports": reports, "checks_run": n_checked,
+            "failures": failed, "ok": not failed}
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--baseline-dir", default=REPO_ROOT,
+                    help="directory of the committed BENCH_*.json baselines")
+    ap.add_argument("--results-dir", default=RESULTS_DIR,
+                    help="directory of the freshly written artifacts")
+    ap.add_argument("--out", default="regression_report.json",
+                    help="report name (written under --results-dir)")
+    args = ap.parse_args(argv)
+
+    report = run(args.baseline_dir, args.results_dir)
+    # write under results/ regardless of where fresh artifacts came from
+    os.makedirs(args.results_dir, exist_ok=True)
+    path = os.path.join(args.results_dir, args.out)
+    with open(path, "w") as f:
+        json.dump(report, f, indent=1, sort_keys=True)
+        f.write("\n")
+
+    for r in report["reports"]:
+        print(f"{r['name']}: {r['status']} "
+              f"({len(r['checks'])} metrics checked)")
+    if not report["ok"]:
+        print(f"\nREGRESSIONS ({len(report['failures'])}):")
+        for c in report["failures"]:
+            print(f"  {c['row']} {c['metric']}: fresh={c['fresh']} vs "
+                  f"baseline={c['baseline']} ({c['kind']} {c['factor']})")
+        print(f"full diffable report: {path}")
+        return 1
+    print(f"benchmark-regression gate OK "
+          f"({report['checks_run']} metrics); report: {path}")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -33,7 +33,8 @@ def _time_round(cons, state, data, *, rounds: int = 10):
     return float(np.median(times)), state
 
 
-def run(steps: int = 6, sharded: bool = False) -> list[dict]:
+def run(steps: int = 6, sharded: bool = False,
+        codec: bool = False) -> list[dict]:
     import jax
     if len(jax.devices()) < 8:
         print("consensus_overhead: needs 8 devices "
@@ -163,6 +164,50 @@ def run(steps: int = 6, sharded: bool = False) -> list[dict]:
             print(f"wrote {path} (per-device consensus-state shrink = "
                   f"{hbm_report['shrink_factor']}x)")
             bench["hbm_report"] = hbm_report
+        if codec:
+            # wire-codec cell (--codec): one measured fused round per codec
+            # plus the per-codec wire-bytes report the CI codec lane
+            # uploads as an artifact (all sizes read from repro.wire)
+            from repro import wire as wire_lib
+            codec_report = {"mesh": bench["mesh"], "arch": bench["arch"],
+                            "codecs": {}}
+            for name in wire_lib.WIRE_CODECS:
+                tr = ConsensusTrainer(
+                    model, mesh, adamw=AdamWConfig(lr=1e-2),
+                    consensus=ConsensusConfig(
+                        penalty=PenaltyConfig(scheme="nap", eta0=0.1),
+                        topology="ring", local_steps=4, wire_codec=name))
+                state = tr.init_state(jax.random.PRNGKey(0))
+                train, cons = tr.jit_step_fns()
+                state, m = train(state, data.batch(0))          # warm
+                t_cons, state = _time_round(cons, state, data)
+                wire_bytes = len(tr.offsets) * tr.codec.wire_bytes()
+                spec = tr.codec.kernel_dequant_spec()
+                rows.append({"mode": f"measured_codec_{name}",
+                             "wire_bytes_per_step": wire_bytes,
+                             "vs_allreduce": round(
+                                 wire_bytes / max(allreduce_bytes, 1), 4)})
+                codec_report["codecs"][name] = {
+                    "round_ms": round(t_cons * 1e3, 2),
+                    "wire_bytes_per_round": wire_bytes,
+                    "wire_bytes_per_param": round(
+                        tr.codec.wire_bytes() / tr.layout.total, 4),
+                    "scale_granularity": ("block" if spec.per_block
+                                          else "leaf"),
+                    "scale_width": spec.scale_width,
+                    "roofline": fused_round_roofline(model, mesh,
+                                                     compression=name),
+                }
+                print(f"consensus bench (codec {name}): "
+                      f"round {t_cons*1e3:.1f}ms wire {wire_bytes}B")
+            native_b = codec_report["codecs"]["native"][
+                "wire_bytes_per_round"]
+            for name, rec in codec_report["codecs"].items():
+                rec["wire_vs_native"] = round(
+                    rec["wire_bytes_per_round"] / max(native_b, 1), 4)
+            path = write_json("wire_codec_report.json", codec_report)
+            print(f"wrote {path}")
+            bench["codec_report"] = codec_report
         bench["fused_round_model"] = {
             comp: fused_round_roofline(model, mesh, compression=comp)
             for comp in ("none", "int8")}
@@ -182,5 +227,10 @@ if __name__ == "__main__":
     ap.add_argument("--sharded", action="store_true",
                     help="add the sharded-engine cell (measured sharded "
                          "rounds + per-device consensus-state HBM report)")
+    ap.add_argument("--codec", action="store_true",
+                    help="add the wire-codec cell: one measured fused "
+                         "round per codec (native/int8/fp8_e4m3/fp8_e5m2) "
+                         "+ the per-codec wire-bytes report "
+                         "(results/wire_codec_report.json)")
     args = ap.parse_args()
-    run(sharded=args.sharded)
+    run(sharded=args.sharded, codec=args.codec)

@@ -112,6 +112,7 @@ def apply_knobs(knobs: dict):
     rw.LORA_REPLICATED = knobs.get("lora_replicated", False)
     dryrun.KNOBS["grad_rs"] = knobs.get("grad_rs", False)
     dryrun.KNOBS["compression"] = knobs.get("compression", "none")
+    dryrun.KNOBS["wire_codec"] = knobs.get("wire_codec", "")
     dryrun.KNOBS["probe_frac"] = knobs.get("probe_frac", 1)
 
 

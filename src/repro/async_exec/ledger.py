@@ -11,9 +11,10 @@ round reads the newest complete slot, never a queue of old ones), which is
 exactly what a double-buffered RDMA mailbox implements on real hardware.
 
 The ledger stores the RAW wire rows (`[deg, J, W]`, the same bytes the
-permute moves — int8 payloads keep their bitcast scale tail in-band), so
-holding a stale payload costs zero recompute: `FlatLayout.decode_split`
-peels payload and scales at consumption time, same as the fresh path.
+permute moves — quantized payloads keep their bitcast scale bytes
+in-band), so holding a stale payload costs zero recompute: the wire codec
+(``repro.wire``, which also sizes W) peels payload and scales at
+consumption time, same as the fresh path.
 
 Staleness accounting does NOT live here: the per-edge clocks are
 ``topology.TopologyState.age`` (the topology runtime is the single owner of
@@ -71,35 +72,43 @@ class WireLedger(NamedTuple):
     w_prev: jax.Array  # [J, J] f32 — weights applied last round
 
 
-def wire_width(layout, compression: str, slayout=None) -> int:
-    """Elements per wire row (int8 payloads carry the scale tail).
+def _codec_for(layout, compression: str, slayout=None):
+    from repro import wire
+    return wire.get_codec(compression, layout, slayout)
 
-    With ``slayout`` (a ``flatten.ShardedLayout``) the row is the SHARDED
-    wire format — per-shard slabs each carrying their own int8 scale tail,
-    so a device's ledger slab holds exactly the bytes its shard decodes
-    (staleness absorption reads only local bytes).
+
+def wire_width(layout, compression: str, slayout=None) -> int:
+    """Elements per wire row (quantized payloads carry their scale bytes).
+
+    Delegates to the wire codec (``repro.wire``): ``compression`` is any
+    codec name or the legacy ``"none"`` spelling. With ``slayout`` (a
+    ``flatten.ShardedLayout``) the row is the SHARDED wire format —
+    per-shard slabs each carrying their own scale bytes, so a device's
+    ledger slab holds exactly the bytes its shard decodes (staleness
+    absorption reads only local bytes).
     """
-    if slayout is not None:
-        # n_shards * shard wire width: == layout.total for a float wire,
-        # + one 4*num_leaves tail per shard for int8
-        return slayout.n_shards * slayout.wire_width(compression)
-    if compression == "int8":
-        return layout.total + 4 * layout.num_leaves
-    return layout.total
+    return _codec_for(layout, compression, slayout).wire_width
 
 
 def wire_row_dtype(layout, compression: str):
-    return jnp.int8 if compression == "int8" else layout.wire_dtype
+    return _codec_for(layout, compression).wire_dtype
 
 
 def init_wire_ledger(layout, deg: int, num_nodes: int,
-                     compression: str, slayout=None) -> WireLedger:
+                     compression: str = "none", slayout=None,
+                     codec=None) -> WireLedger:
     """Zero-filled ledger; the executor guarantees the first read of every
     edge is fresh (the clock marks a node's initial parameters as a landed
-    round -1 send), so the zeros are never consumed."""
-    w = wire_width(layout, compression, slayout)
+    round -1 send), so the zeros are never consumed.
+
+    Rows are sized and typed by the wire codec: pass ``codec`` (a
+    ``repro.wire.WireCodec``, what the trainer does) or let the legacy
+    ``compression``/``slayout`` pair resolve one.
+    """
+    if codec is None:
+        codec = _codec_for(layout, compression, slayout)
     return WireLedger(
-        wires=jnp.zeros((max(deg, 1), num_nodes, w),
-                        wire_row_dtype(layout, compression)),
+        wires=jnp.zeros((max(deg, 1), num_nodes, codec.wire_width),
+                        codec.wire_dtype),
         round=jnp.zeros((), jnp.int32),
         w_prev=jnp.zeros((num_nodes, num_nodes), jnp.float32))

@@ -13,12 +13,15 @@ Two entry points:
     update + both residual partials; neighbor means precomputed upstream).
     Kept as the simple building block and oracle target.
   * ``consensus_round`` — the flat-buffer engine kernel: takes the raw
-    *rolled wire payloads* for every graph offset (int8 or float) and fuses
-    dequantization, both neighbor means, prox pull, dual update and both
-    residual reductions. Per-node scalars (alpha, eta_sum, eta_node), the
-    per-offset edge weights and the per-(offset, node, leaf) dequant scales
-    ride in SMEM; a static block->leaf table resolves which scale applies to
-    the current block.
+    *rolled wire payloads* for every graph offset (int8/fp8 or float) and
+    fuses dequantization, both neighbor means, prox pull, dual update and
+    both residual reductions. Per-node scalars (alpha, eta_sum, eta_node),
+    the per-offset edge weights and the per-offset dequant scales ride in
+    SMEM. Scale granularity is codec-parameterized
+    (``repro.wire.DequantSpec``): per-(node, leaf) scales resolve through
+    the block->leaf table (the int8 wire), per-(node, BLOCK) scales (the
+    fp8 wires) index by the block's own program id — no table lookup, and
+    the scale rows shard with the slabs on the sharded engine.
 
 Per block of the flat parameter vector (``consensus_round``):
     nbr_w     = sum_d e_sym[d] * dequant(wire[d])
@@ -135,11 +138,13 @@ def consensus_update(theta, lam, nbr_avg, theta_bar, theta_bar_prev, *,
     return theta_new[:n], lam_new[:n], rsq.sum(), ssq.sum()
 
 
-def _round_kernel(deg, block_leaf_ref, node_ref, esym_ref, scale_ref,
-                  theta_ref, lam_ref, barp_ref, wires_ref,
+def _round_kernel(deg, per_block, block_leaf_ref, node_ref, esym_ref,
+                  scale_ref, theta_ref, lam_ref, barp_ref, wires_ref,
                   theta_out, lam_out, bar_out, rsq_out, ssq_out):
     b = pl.program_id(1)
-    li = block_leaf_ref[b]
+    # per-leaf scales resolve through the block->leaf table; per-block
+    # scales (the fp8 codecs) index by the block id directly
+    li = b if per_block else block_leaf_ref[b]
     alpha = node_ref[0, 0]
     eta_sum = node_ref[1, 0]
     eta_node = node_ref[2, 0]
@@ -167,8 +172,8 @@ def _round_kernel(deg, block_leaf_ref, node_ref, esym_ref, scale_ref,
     ssq_out[0, 0] = (eta_node * eta_node) * jnp.sum(dbar * dbar)
 
 
-def _row_kernel(deg, block_size, block_leaf_ref, node_ref, esym_ref,
-                scale_ref, theta_ref, lam_ref, barp_ref, wires_ref,
+def _row_kernel(deg, block_size, per_block, block_leaf_ref, node_ref,
+                esym_ref, scale_ref, theta_ref, lam_ref, barp_ref, wires_ref,
                 theta_out, lam_out, bar_out, rsq_out, ssq_out):
     """Whole-row variant of ``_round_kernel`` (one grid step per node).
 
@@ -190,7 +195,8 @@ def _row_kernel(deg, block_size, block_leaf_ref, node_ref, esym_ref,
     nbr_w = jnp.zeros_like(theta)
     nbr_p = jnp.zeros_like(theta)
     for d in range(deg):
-        scale_vec = jnp.repeat(scale_ref[d, 0, :][bl], block_size,
+        row = scale_ref[d, 0, :] if per_block else scale_ref[d, 0, :][bl]
+        scale_vec = jnp.repeat(row, block_size,
                                total_repeat_length=theta.shape[0])
         x = wires_ref[d, 0, :].astype(jnp.float32) * scale_vec
         nbr_w = nbr_w + esym_ref[d, 0] * x
@@ -212,8 +218,8 @@ def _row_kernel(deg, block_size, block_leaf_ref, node_ref, esym_ref,
     ssq_out[0, 0] = (eta_node * eta_node) * blocksum(dbar * dbar)
 
 
-def _round_kernel_masked(deg, has_kick, block_leaf_ref, node_ref, esym_ref,
-                         barw_ref, *refs):
+def _round_kernel_masked(deg, has_kick, per_block, block_leaf_ref, node_ref,
+                         esym_ref, barw_ref, *refs):
     """Edge-gated variant of ``_round_kernel`` (see module docstring)."""
     if has_kick:
         (kick_ref, scale_ref, theta_ref, lam_ref, barp_ref, wires_ref,
@@ -222,7 +228,7 @@ def _round_kernel_masked(deg, has_kick, block_leaf_ref, node_ref, esym_ref,
         (scale_ref, theta_ref, lam_ref, barp_ref, wires_ref,
          theta_out, lam_out, bar_out, rsq_out, ssq_out) = refs
     b = pl.program_id(1)
-    li = block_leaf_ref[b]
+    li = b if per_block else block_leaf_ref[b]
     alpha = node_ref[0, 0]
     eta_sum = node_ref[1, 0]
     eta_node = node_ref[2, 0]
@@ -260,8 +266,8 @@ def _round_kernel_masked(deg, has_kick, block_leaf_ref, node_ref, esym_ref,
     ssq_out[0, 0] = (eta_node * eta_node) * jnp.sum(dbar * dbar)
 
 
-def _row_kernel_masked(deg, block_size, has_kick, block_leaf_ref, node_ref,
-                       esym_ref, barw_ref, *refs):
+def _row_kernel_masked(deg, block_size, has_kick, per_block, block_leaf_ref,
+                       node_ref, esym_ref, barw_ref, *refs):
     """Edge-gated variant of ``_row_kernel`` (whole-row interpret tiling)."""
     if has_kick:
         (kick_ref, scale_ref, theta_ref, lam_ref, barp_ref, wires_ref,
@@ -283,7 +289,8 @@ def _row_kernel_masked(deg, block_size, has_kick, block_leaf_ref, node_ref,
     kick_x = jnp.zeros_like(theta)
     ksum = jnp.float32(0.0)
     for d in range(deg):
-        scale_vec = jnp.repeat(scale_ref[d, 0, :][bl], block_size,
+        row = scale_ref[d, 0, :] if per_block else scale_ref[d, 0, :][bl]
+        scale_vec = jnp.repeat(row, block_size,
                                total_repeat_length=theta.shape[0])
         x = wires_ref[d, 0, :].astype(jnp.float32) * scale_vec
         nbr_w = nbr_w + esym_ref[d, 0] * x
@@ -312,7 +319,7 @@ def _row_kernel_masked(deg, block_size, has_kick, block_leaf_ref, node_ref,
 
 def _row_round(theta, lam, bar_prev, wires, scales, e_sym, node_scalars,
                block_leaf_arr, *, block_size, interpret, bar_w=None,
-               kick_w=None):
+               kick_w=None, scales_per_block=False):
     j, total = theta.shape
     deg = wires.shape[0]
     masked = bar_w is not None
@@ -343,8 +350,10 @@ def _row_round(theta, lam, bar_prev, wires, scales, e_sym, node_scalars,
     args += [scales.astype(jnp.float32), theta, lam, bar_prev, wires]
     alias_base = len(in_specs) - 4                    # position of theta
     kernel = (functools.partial(_row_kernel_masked, deg, block_size,
-                                kick_w is not None) if masked
-              else functools.partial(_row_kernel, deg, block_size))
+                                kick_w is not None, scales_per_block)
+              if masked
+              else functools.partial(_row_kernel, deg, block_size,
+                                     scales_per_block))
     return pl.pallas_call(
         kernel,
         grid=(j,),
@@ -366,22 +375,24 @@ def _row_round(theta, lam, bar_prev, wires, scales, e_sym, node_scalars,
 
 
 @functools.partial(jax.jit, static_argnames=("block_leaf", "block_size",
-                                             "interpret", "whole_rows"))
+                                             "interpret", "whole_rows",
+                                             "scales_per_block"))
 def consensus_round(theta, lam, bar_prev, wires, scales, e_sym,
                     alpha, eta_sum, eta_node, *,
                     block_leaf: tuple[int, ...] | None, block_size: int,
                     interpret: bool = True,
                     whole_rows: bool | None = None,
                     bar_w=None, inv_deg=None, kick_w=None,
-                    block_leaf_arr=None):
+                    block_leaf_arr=None, scales_per_block: bool = False):
     """Whole-round fused kernel over the flat buffer.
 
     Args:
       theta, lam, bar_prev: [J, total] float buffers (total = blocks * bs).
-      wires: [deg, J, total] rolled wire payloads — int8 (quantized) or any
-        float dtype; row d holds theta_{(i+off_d) % J} at node i.
+      wires: [deg, J, total] rolled wire payloads — int8/fp8 (quantized) or
+        any float dtype; row d holds theta_{(i+off_d) % J} at node i.
       scales: [deg, J, L] f32 per-leaf dequant scales (ones when the wire is
-        uncompressed).
+        uncompressed) — or, with ``scales_per_block``, [deg, J, num_blocks]
+        per-BLOCK scales on the layout's block grid (the fp8 codecs).
       e_sym: [deg, J] f32 symmetrized per-edge penalties eta_sym_ij
         (edge-gated upstream for dynamic topologies: zero on masked edges).
       alpha, eta_sum, eta_node: [J] f32 per-node scalars.
@@ -403,6 +414,12 @@ def consensus_round(theta, lam, bar_prev, wires, scales, e_sym,
         runs the same program on a DIFFERENT slab of the flat axis, so its
         slab's table must be data, not program. The table was already fed
         to the kernel as an SMEM operand — only the tracing changes.
+      scales_per_block: static — ``scales`` carries one scalar per BLOCK
+        (the fp8 codecs' granularity, ``repro.wire.DequantSpec``) instead
+        of one per leaf; block b dequants from ``scales[b]`` directly, no
+        block->leaf lookup. Under the sharded engine the scale rows shard
+        with the slabs, so the LOCAL block id still indexes correctly.
+        False keeps the per-leaf path bit-identical.
 
     Returns (theta_new [J, total], lam_new [J, total], bar [J, total] f32,
              r_sq [J], s_sq [J]).
@@ -435,12 +452,14 @@ def consensus_round(theta, lam, bar_prev, wires, scales, e_sym,
         assert len(block_leaf) == nblocks, (len(block_leaf), nblocks)
         block_leaf_arr = jnp.asarray(block_leaf, jnp.int32)
     assert block_leaf_arr.shape == (nblocks,), (block_leaf_arr.shape, nblocks)
+    if scales_per_block:
+        assert scales.shape[-1] == nblocks, (scales.shape, nblocks)
 
     if interpret if whole_rows is None else whole_rows:
         tn, ln, bar, rsq, ssq = _row_round(
             theta, lam, bar_prev, wires, scales, e_sym, node_scalars,
             block_leaf_arr, block_size=block_size, interpret=interpret,
-            bar_w=bar_w, kick_w=kick_w)
+            bar_w=bar_w, kick_w=kick_w, scales_per_block=scales_per_block)
         return tn, ln, bar, rsq[:, 0], ssq[:, 0]
 
     smem = pl.BlockSpec(memory_space=pltpu.SMEM)
@@ -475,8 +494,9 @@ def consensus_round(theta, lam, bar_prev, wires, scales, e_sym,
     ab = len(in_specs) - 4                            # position of theta
 
     kernel = (functools.partial(_round_kernel_masked, deg,
-                                kick_w is not None) if masked
-              else functools.partial(_round_kernel, deg))
+                                kick_w is not None, scales_per_block)
+              if masked
+              else functools.partial(_round_kernel, deg, scales_per_block))
     theta_new, lam_new, bar, rsq, ssq = pl.pallas_call(
         kernel,
         grid=(j, nblocks),

@@ -73,13 +73,15 @@ def consensus_round(theta, lam, bar_prev, wires, scales, e_sym,
                     alpha, eta_sum, eta_node, *, block_leaf, block_size,
                     whole_rows: bool | None = None,
                     bar_w=None, inv_deg=None, kick_w=None,
-                    block_leaf_arr=None):
+                    block_leaf_arr=None, scales_per_block: bool = False):
     """Whole-round fused flat-buffer kernel (see consensus_update module).
 
     ``bar_w``/``inv_deg`` select the edge-gated dynamic-topology variant;
     ``kick_w`` additionally compiles the zero-kick dual absorption.
     ``block_leaf_arr`` (traced) replaces the static ``block_leaf`` tuple on
     the sharded engine path (per-device slab tables).
+    ``scales_per_block`` selects the per-BLOCK dequant granularity of the
+    fp8 wire codecs (``repro.wire``) instead of the per-leaf table lookup.
     """
     return _cu.consensus_round(theta, lam, bar_prev, wires, scales, e_sym,
                                alpha, eta_sum, eta_node,
@@ -89,4 +91,5 @@ def consensus_round(theta, lam, bar_prev, wires, scales, e_sym,
                                interpret=interpret_mode(),
                                whole_rows=whole_rows,
                                bar_w=bar_w, inv_deg=inv_deg, kick_w=kick_w,
-                               block_leaf_arr=block_leaf_arr)
+                               block_leaf_arr=block_leaf_arr,
+                               scales_per_block=scales_per_block)

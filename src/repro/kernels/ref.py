@@ -51,19 +51,26 @@ def rwkv6_scan_ref(r, k, v, log_w, u, s0):
 def consensus_round_ref(theta, lam, bar_prev, wires, scales, e_sym,
                         alpha, eta_sum, eta_node, *,
                         block_leaf, block_size: int,
-                        bar_w=None, inv_deg=None, kick_w=None):
+                        bar_w=None, inv_deg=None, kick_w=None,
+                        scales_per_block: bool = False):
     """Whole-round flat-buffer oracle (see consensus_update.consensus_round).
 
     Reductions are evaluated blockwise in the kernel's order so the fused
     and reference paths agree to float32 round-off, not just statistically.
     ``bar_w``/``inv_deg`` mirror the kernel's dynamic-topology edge gating
     (both None = the ungated PR 1 math); ``kick_w`` mirrors its zero-kick
-    dual absorption for newly-gated edges.
+    dual absorption for newly-gated edges; ``scales_per_block`` mirrors the
+    fp8 codecs' per-block dequant granularity (``scales`` then carries
+    [deg, J, num_blocks] rows on the layout's block grid).
     """
     j, total = theta.shape
     deg = wires.shape[0]
-    bl = jnp.asarray(block_leaf, jnp.int32)
-    scale_vec = jnp.repeat(scales.astype(jnp.float32)[..., bl], block_size,
+    if scales_per_block:
+        srows = scales.astype(jnp.float32)
+    else:
+        bl = jnp.asarray(block_leaf, jnp.int32)
+        srows = scales.astype(jnp.float32)[..., bl]
+    scale_vec = jnp.repeat(srows, block_size,
                            axis=-1, total_repeat_length=total)
     x = wires.astype(jnp.float32) * scale_vec          # [deg, J, total]
     e = e_sym.astype(jnp.float32)[..., None]

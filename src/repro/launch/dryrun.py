@@ -83,19 +83,24 @@ def consensus_state_bytes(layout, *, deg: int, compression: str,
 
     Counts what one device materializes for its pod's node row: the f32
     lam / theta_bar_prev flat buffers, the stacked per-offset wire rows the
-    fused round streams, and (async executor) the wire-ledger rows. With
-    ``n_shards > 1`` (``ConsensusConfig.shard_consensus``) each device
-    holds only its in-pod slab, so everything shrinks by ~the in-pod axis
-    size — the int8 wire keeps one 4*num_leaves scale tail per shard, the
-    only term that does not divide.
+    fused round streams, and (async executor) the wire-ledger rows.
+    ``compression`` is any wire-codec name (``repro.wire.WIRE_CODECS``) or
+    the legacy ``"none"`` spelling — all row sizes are read from the
+    codec. With ``n_shards > 1`` (``ConsensusConfig.shard_consensus``)
+    each device holds only its in-pod slab, so everything shrinks by ~the
+    in-pod axis size — the int8 wire keeps one 4*num_leaves scale tail per
+    shard (the only term that does not divide); the fp8 per-block scales
+    split exactly with the slabs.
     """
+    from repro import wire
+
     if n_shards > 1:
         slay = layout.shard(n_shards)
         flat = 4 * slay.shard_total
-        wire_row = slay.wire_row_bytes(compression)
+        wire_row = wire.get_codec(compression, layout, slay).wire_row_bytes()
     else:
         flat = 4 * layout.total
-        wire_row = layout.wire_bytes(compression)
+        wire_row = wire.get_codec(compression, layout).wire_bytes()
     out = {"lam": flat, "theta_bar_prev": flat,
            "wire_rows": deg * wire_row}
     if with_ledger:
@@ -110,10 +115,14 @@ def fused_round_roofline(model: "Model", mesh, *, compression: str,
                          with_ledger: bool = False) -> dict:
     """Analytic HBM/wire model of the fused flat-buffer consensus round.
 
+    ``compression`` is any wire-codec name (``repro.wire.WIRE_CODECS``) or
+    the legacy ``"none"`` spelling; all wire volumes are read from the
+    codec — no hard-coded per-format byte tables.
+
     The Pallas round kernel is opaque to XLA's cost analysis (and runs in
     interpret mode on CPU dry-runs), so the fused path is accounted from the
     static FlatLayout instead: per node the kernel reads theta, lam and
-    bar_prev (f32), streams deg rolled wire payloads (int8 or f32), and
+    bar_prev (f32), streams deg rolled wire payloads (quantized or f32), and
     writes theta, lam and bar — one logical HBM pass over the flat vector
     per operand. The naive per-leaf path is ~2 read-modify-write accumulator
     passes per offset plus a dequant materialization on top of the 6
@@ -135,6 +144,7 @@ def fused_round_roofline(model: "Model", mesh, *, compression: str,
     per-device ``consensus_state`` breakdown for both modes (the ISSUE
     acceptance shrink).
     """
+    from repro import wire
     from repro.core.graph import build_graph
     from repro.distributed.sharding import inpod_axes
     from repro.optim import flatten
@@ -151,6 +161,11 @@ def fused_round_roofline(model: "Model", mesh, *, compression: str,
     bs = block_size or flatten.auto_block_size(ap)
     lay = flatten.FlatLayout.for_tree(ap, block_size=bs, node_axis=False,
                                       shards=n_shards)
+    # wire volume is read from the codec — the same object the trainer
+    # encodes with and the ledger sizes rows from, so the roofline cannot
+    # drift from the bytes a permute actually moves
+    codec = wire.get_codec(compression, lay,
+                           lay.shard(n_shards) if n_shards > 1 else None)
     j = int(mesh.shape["pod"])
     topo_rt = TopologyRuntime(build_graph(topology, j),
                               dyn_topology or TopologyConfig())
@@ -161,10 +176,9 @@ def fused_round_roofline(model: "Model", mesh, *, compression: str,
     active_offsets = topo_rt.expected_active_offsets() or 1.0
     n = lay.total
     tb = jnp.dtype(lay.wire_dtype).itemsize            # theta element bytes
-    # per NODE per round (sum over the node's shards: the sharded int8
-    # wire additionally carries one scale tail per shard)
-    row_bytes = lay.shard(n_shards).wire_bytes(compression) \
-        if n_shards > 1 else lay.wire_bytes(compression)
+    # per NODE per round (sum over the node's shards: each shard's message
+    # carries its own scale bytes)
+    row_bytes = codec.wire_bytes()
     wire_bytes = int(active_offsets * row_bytes)
     # kernel, per NODE: read theta (tb) + lam/bar_prev (f32) + deg wires,
     # write theta (tb) + lam/bar (f32). The *_per_device variants divide
@@ -180,6 +194,7 @@ def fused_round_roofline(model: "Model", mesh, *, compression: str,
     naive_hbm = n * (2 * tb + 4 * 4) + deg * lay.wire_bytes(compression) \
         + deg * n * 4 * 3
     return {
+        "wire_codec": codec.name,
         "flat_elems": n, "block_size": bs, "blocks": lay.num_blocks,
         "padding_frac": round(lay.waste_frac, 4),
         "offsets_compiled": deg,
@@ -256,11 +271,17 @@ def model_flops(model: Model, cell: ShapeCell) -> float:
 # §Perf knobs consumed here (benchmarks/perf_iter.py sets them per variant)
 KNOBS = {
     "grad_rs": False,        # reduce-scatter grads to param shards
-    "compression": "none",   # consensus exchange quantization
+    "compression": "none",   # legacy spelling of the wire codec
+    "wire_codec": "",        # repro.wire codec; "" resolves from compression
     "probe_frac": 1,         # probe-batch reduction for the consensus round
     "topo_scheduler": "static",  # dynamic-topology edge scheduler
     "shard_consensus": False,    # in-pod sharded flat consensus state
 }
+
+
+def _knob_codec() -> str:
+    """The wire-codec spec the KNOBS currently select."""
+    return KNOBS["wire_codec"] or KNOBS["compression"]
 
 
 def _compile_step(cfg: ArchConfig, cell: ShapeCell, mesh, *,
@@ -287,6 +308,7 @@ def _compile_step(cfg: ArchConfig, cell: ShapeCell, mesh, *,
                     penalty=PenaltyConfig(scheme="nap", eta0=0.1),
                     topology="ring", local_steps=8,
                     compression=KNOBS["compression"],
+                    wire_codec=KNOBS["wire_codec"],
                     grad_rs=KNOBS["grad_rs"],
                     shard_consensus=KNOBS["shard_consensus"],
                     dyn_topology=TopologyConfig(
@@ -434,7 +456,7 @@ def lower_cell(cfg: ArchConfig, cell: ShapeCell, *, multi_pod: bool,
                                              which="consensus")
         from repro.topology import TopologyConfig as _TC
         rec["consensus"]["fused_round_model"] = fused_round_roofline(
-            model, mesh, compression=KNOBS["compression"],
+            model, mesh, compression=_knob_codec(),
             dyn_topology=_TC(scheduler=KNOBS["topo_scheduler"]),
             shard_consensus=KNOBS["shard_consensus"])
     rec["lower_compile_s"] = round(time.time() - t0, 1)

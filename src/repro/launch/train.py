@@ -79,7 +79,15 @@ def parse_args(argv=None):
     ap.add_argument("--local-steps", type=int, default=4)
     ap.add_argument("--eta0", type=float, default=0.1)
     ap.add_argument("--lr", type=float, default=1e-2)
-    ap.add_argument("--compression", default="none")
+    ap.add_argument("--compression", default="none",
+                    help="legacy spelling of --wire-codec (none | int8)")
+    ap.add_argument("--wire-codec", default="",
+                    choices=["", "native", "int8", "fp8_e4m3", "fp8_e5m2"],
+                    help="consensus wire codec (repro.wire): native = "
+                         "params dtype, int8 = absmax per leaf + bitcast "
+                         "scale tail, fp8_* = 1 B/param float8 with "
+                         "per-block f32 scales; empty resolves from "
+                         "--compression")
     ap.add_argument("--ckpt-dir", default="")
     ap.add_argument("--ckpt-every", type=int, default=10)
     ap.add_argument("--seed", type=int, default=0)
@@ -114,6 +122,7 @@ def main(argv=None):
             penalty=PenaltyConfig(scheme=args.scheme, eta0=args.eta0),
             topology=args.topology, local_steps=args.local_steps,
             compression=args.compression,
+            wire_codec=args.wire_codec,
             shard_consensus=args.shard_consensus,
             dyn_topology=TopologyConfig(scheduler=topo_sched, churn=churn,
                                         max_staleness=args.max_staleness),

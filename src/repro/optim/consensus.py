@@ -7,7 +7,8 @@ data shard (f_i = local loss). A consensus round then performs, entirely along
 the pod axis (the scarce DCN tier):
 
   1. neighbor exchange of theta (circulant ppermute per graph offset,
-     optionally int8-quantized — the dual update absorbs quantization error),
+     optionally quantized through a pluggable wire codec — int8 per-leaf or
+     fp8 per-block, ``repro.wire`` — the dual update absorbs the error),
   2. objective probes f_i(theta_j) on a held-out probe batch (eq. 7 kappas),
   3. the proximal parameter pull + dual update (fused: one HBM pass),
   4. local residuals (eq. 5) and the per-edge penalty update (eq. 4/6/9/12)
@@ -49,6 +50,7 @@ from repro.optim import flatten
 from repro.topology import (TopologyConfig, TopologyRuntime, TopologyState,
                             active_edge_fraction, compose_mask, sym_age,
                             tick_age)
+from repro import wire as wire_lib
 
 
 @dataclasses.dataclass(frozen=True)
@@ -57,7 +59,11 @@ class ConsensusConfig:
     topology: str = "ring"         # circulant: ring | complete | expander
     local_steps: int = 8           # H — local optimizer steps per round
     prox_step: float = 0.5         # alpha in the prox pull (scaled by curv.)
-    compression: str = "none"      # none | int8 — exchange quantization
+    compression: str = "none"      # legacy spelling: none | int8
+    # wire codec for the consensus exchange (repro.wire): native | int8 |
+    # fp8_e4m3 | fp8_e5m2. Empty resolves from `compression` ("none" ->
+    # native), keeping the legacy knob working; a non-empty value wins.
+    wire_codec: str = ""
     use_fused_kernel: bool = True  # Pallas consensus_round (interpret on CPU)
     block_size: int = 0            # flat-layout block; 0 => auto
     grad_rs: bool = False          # reduce-scatter grads to param shards
@@ -136,6 +142,14 @@ class ConsensusTrainer:
                                                   shards=self.n_shards)
         self.slayout = self.layout.shard(self.n_shards) if self.sharded \
             else None
+        # the pluggable wire codec (repro.wire) every wire producer and
+        # consumer goes through: trainer encode/decode, ledger row sizing,
+        # kernel dequant granularity, probe-side unpack
+        self.codec_name = wire_lib.resolve_codec_name(
+            consensus.wire_codec or consensus.compression)
+        self.codec = wire_lib.get_codec(self.codec_name, self.layout,
+                                        self.slayout)
+        self.dequant_spec = self.codec.kernel_dequant_spec()
 
     # ------------------------------------------------------------ state ----
     def _node_stack(self, tree):
@@ -156,9 +170,7 @@ class ConsensusTrainer:
         ledger = None
         if self.async_cfg is not None and self.num_nodes > 1:
             ledger = init_wire_ledger(self.layout, len(self.offsets),
-                                      self.num_nodes,
-                                      self.ccfg.compression,
-                                      slayout=self.slayout)
+                                      self.num_nodes, codec=self.codec)
         return TrainState(
             params=params, opt=opt,
             lam=jnp.zeros(flat_shape, jnp.float32),
@@ -194,8 +206,7 @@ class ConsensusTrainer:
             ledger = jax.tree_util.tree_map(
                 lambda x: jax.ShapeDtypeStruct(x.shape, x.dtype),
                 init_wire_ledger(self.layout, len(self.offsets),
-                                 self.num_nodes, self.ccfg.compression,
-                                 slayout=self.slayout))
+                                 self.num_nodes, codec=self.codec))
         return TrainState(params=params, opt=opt, lam=flat0,
                           theta_bar_prev=flat0, penalty=pen,
                           step=jax.ShapeDtypeStruct((), jnp.int32),
@@ -386,22 +397,30 @@ class ConsensusTrainer:
     def _encode_wire(self, theta_flat):
         """Flat buffer -> the wire message the permutes move.
 
-        Unsharded: ``FlatLayout.encode_int8`` (scale tail once per node).
-        Sharded: ``ShardedLayout.encode_int8`` — same payload bytes, scale
-        tail replicated per shard so decode stays shard-local.
+        One call into the configured codec (``repro.wire``): native passes
+        the packed buffer through, int8/fp8 quantize with their scale
+        bytes in-band. Sharded wires are per-shard self-contained slabs
+        (see ``docs/wire_formats.md``), pinned to the engine's flat
+        sharding so each device encodes only its slab.
         """
-        if self.ccfg.compression != "int8":
-            return self._constrain_flat(theta_flat)
+        wire = self.codec.encode(theta_flat)
         if self.sharded:
-            return self._constrain_flat(self.slayout.encode_int8(theta_flat))
-        return self.layout.encode_int8(theta_flat)
+            return self._constrain_flat(wire)
+        return wire
 
     def _decode_wire(self, wire):
-        """Wire message -> (payload [J, total], scales [J, L] | None)."""
+        """Wire message -> (payload [J, total], scales [J, W] | None).
+
+        ``W`` is the codec's scale width: num_leaves for the int8 tail,
+        num_blocks for the fp8 per-block scales (which shard with the
+        slabs — slab-local decode, no in-pod broadcast).
+        """
+        payload, scales = self.codec.decode(wire)
         if self.sharded:
-            payload, scales = self.slayout.split_wire(wire)
-            return self._constrain_flat(payload), scales
-        return self.layout.decode_split(wire)
+            payload = self._constrain_flat(payload)
+            if scales is not None and self.dequant_spec.per_block:
+                scales = self._constrain_flat(scales)
+        return payload, scales
 
     def _fused_round(self, theta_flat, lam_flat, bar_prev, wires, scales,
                      e_stack, alpha, sym_sum, eta_node,
@@ -429,9 +448,15 @@ class ConsensusTrainer:
         inner = self.inner_axes
         masked = bar_w is not None
         kicked = kick_w is not None
+        per_block = self.dequant_spec.per_block
         pod = P("pod")
         flat_spec = self._flat_pspec(2)
         wires_spec = self._flat_pspec(3)
+        # per-leaf scale rows are replicated in-pod (global leaf ids);
+        # per-block rows (fp8) shard with the slabs, so each device's
+        # kernel reads its own blocks' scales at local block ids
+        scales_spec = self._flat_pspec(3) if per_block \
+            else P(None, "pod", None)
 
         # node scalars ride as one stacked [3|4, J] SMEM block; the traced
         # edge gates / kick weights (when present) are extra [deg, J]
@@ -443,7 +468,7 @@ class ConsensusTrainer:
             + ([bar_w] if masked else []) + ([kick_w] if kicked else []) \
             + [node_sc]
         in_specs = (flat_spec, flat_spec, flat_spec,
-                    wires_spec, P(None, "pod", None),
+                    wires_spec, scales_spec,
                     P(None, "pod")) \
             + ((P(None, "pod"),) if masked else ()) \
             + ((P(None, "pod"),) if kicked else ()) + (P(None, "pod"),)
@@ -463,7 +488,8 @@ class ConsensusTrainer:
                             else tuple(lay.block_leaf.tolist())),
                 block_leaf_arr=rest.pop(0)[0] if sharded else None,
                 block_size=lay.block_size,
-                bar_w=bw, inv_deg=nsc[3] if masked else None, kick_w=kw)
+                bar_w=bw, inv_deg=nsc[3] if masked else None, kick_w=kw,
+                scales_per_block=per_block)
             if sharded:
                 # finish the blockwise residual partials across the slab
                 # grid: ONE psum over the in-pod axes per reduction
@@ -509,7 +535,6 @@ class ConsensusTrainer:
         pcfg = self.ccfg.penalty
         idx = jnp.arange(j)
         lay = self.layout
-        int8 = self.ccfg.compression == "int8"
         dynamic = self.dynamic
 
         vloss = self._probe_vloss()
@@ -524,7 +549,7 @@ class ConsensusTrainer:
         wire = self._encode_wire(theta_flat)
 
         eta = state.penalty.eta
-        ones = jnp.ones((j, lay.num_leaves), jnp.float32)
+        ones = jnp.ones((j, self.dequant_spec.scale_width), jnp.float32)
         sym_sum = jnp.zeros((j,), jnp.float32)
         f_nbr = jnp.zeros((j, j), jnp.float32)
         payloads, scale_rows, e_rows = [], [], []
@@ -538,7 +563,7 @@ class ConsensusTrainer:
             mask_f = topo.mask.astype(jnp.float32)
             act = jnp.zeros((j,), jnp.float32)
             w_rows = []
-            payload_dtype = jnp.int8 if int8 else lay.wire_dtype
+            payload_dtype = self.codec.payload_dtype
         for off in offsets:
             jidx = (idx + off) % j
 
@@ -551,7 +576,7 @@ class ConsensusTrainer:
                 rolled = jax.lax.optimization_barrier(
                     jnp.roll(wire, -off, axis=0))
                 payload, scales = self._decode_wire(rolled)
-                f_off = vloss(lay.unpack(payload, scales=scales),
+                f_off = vloss(self.codec.unpack(payload, scales),
                               probe_batch)
                 return payload, (ones if scales is None else scales), f_off
 
@@ -620,7 +645,8 @@ class ConsensusTrainer:
                     theta_flat, state.lam, state.theta_bar_prev, wires,
                     scales, e_stack, alpha, sym_sum, eta_node,
                     block_leaf=lay.block_leaf, block_size=lay.block_size,
-                    bar_w=bar_w, inv_deg=inv_deg, kick_w=kick_w)
+                    bar_w=bar_w, inv_deg=inv_deg, kick_w=kick_w,
+                    scales_per_block=self.dequant_spec.per_block)
 
         params_new = lay.unpack(theta_new)
         r_norm = jnp.sqrt(r_sq)
@@ -722,7 +748,6 @@ class ConsensusTrainer:
         pcfg = self.ccfg.penalty
         idx = jnp.arange(j)
         lay = self.layout
-        int8 = self.ccfg.compression == "int8"
         dynamic = self.dynamic
         ledger: WireLedger = state.ledger
         vloss = self._probe_vloss()
@@ -778,7 +803,7 @@ class ConsensusTrainer:
             lay.pack(state.params, dtype=lay.wire_dtype))
         wire = self._encode_wire(theta_flat)
 
-        ones = jnp.ones((j, lay.num_leaves), jnp.float32)
+        ones = jnp.ones((j, self.dequant_spec.scale_width), jnp.float32)
         sym_sum = jnp.zeros((j,), jnp.float32)
         act = jnp.zeros((j,), jnp.float32)
         f_nbr = jnp.zeros((j, j), jnp.float32)
@@ -808,7 +833,7 @@ class ConsensusTrainer:
             k_off = kick_m[idx, jidx]
 
             def _probe(payload=payload, scales_row=scales_row):
-                return vloss(lay.unpack(payload, scales=scales_row),
+                return vloss(self.codec.unpack(payload, scales_row),
                              probe_batch)
 
             # probe the payload actually consumed (stale ones included —
@@ -850,7 +875,8 @@ class ConsensusTrainer:
                     theta_flat, state.lam, state.theta_bar_prev, wires,
                     scales, e_stack, alpha, sym_sum, eta_node,
                     block_leaf=lay.block_leaf, block_size=lay.block_size,
-                    bar_w=bar_w, inv_deg=inv_deg, kick_w=kick_w)
+                    bar_w=bar_w, inv_deg=inv_deg, kick_w=kick_w,
+                    scales_per_block=self.dequant_spec.per_block)
 
         params_new = lay.unpack(theta_new)
         r_norm = jnp.sqrt(r_sq)

@@ -11,8 +11,13 @@ the per-node state (params, duals, neighbor means) into a single
     contiguous bytes (instead of one per leaf),
   * the fused Pallas kernel (``repro.kernels.consensus_update
     .consensus_round``) runs once over the whole vector,
-  * int8 wire scales ride *inside* the same buffer (bitcast to int8 and
-    appended as a tail) so quantized exchange still needs only one permute.
+  * compressed wire scales ride *inside* the same buffer (bitcast to int8
+    and appended as a tail) so quantized exchange still needs one permute.
+
+The wire FORMAT itself lives in ``repro.wire`` (the pluggable codec
+subsystem: native / int8 / fp8 per-block, see ``docs/wire_formats.md``);
+the ``encode_int8`` / ``decode_split`` / ``wire_bytes`` methods here are
+kept as thin delegates into the ``int8`` codec for compatibility.
 
 Layout invariants:
 
@@ -142,12 +147,13 @@ class FlatLayout:
     def wire_bytes(self, compression: str) -> int:
         """Bytes per node moved by ONE graph-offset permute of the wire.
 
-        The single source of truth for wire accounting — the dry-run
-        roofline and the benchmarks both read this.
+        ``compression`` is any codec name (``repro.wire.WIRE_CODECS``) or
+        the legacy ``"none"`` spelling. Delegates to the codec — the
+        single source of truth for wire accounting (the dry-run roofline
+        and the benchmarks both read this).
         """
-        if compression == "int8":
-            return self.total + 4 * self.num_leaves   # payload + scale tail
-        return self.total * jnp.dtype(self.wire_dtype).itemsize
+        from repro import wire
+        return wire.get_codec(compression, self).wire_bytes()
 
     # ------------------------------------------------------- pack/unpack ----
     def pack(self, tree: Any, dtype=jnp.float32) -> jax.Array:
@@ -162,21 +168,29 @@ class FlatLayout:
             parts.append(flat)
         return jnp.concatenate(parts, axis=1)
 
-    def unpack(self, buf: jax.Array, *, scales: jax.Array | None = None
-               ) -> Any:
+    def unpack(self, buf: jax.Array, *, scales: jax.Array | None = None,
+               scales_per_block: bool = False) -> Any:
         """[J, total] buffer -> pytree of [J, ...] leaves in leaf dtype.
 
-        ``scales`` ([J, num_leaves], optional) dequantizes an int8 payload:
-        leaf li is multiplied by ``scales[:, li]``. The slice/scale/reshape
-        chain is elementwise per leaf, so XLA fuses it into the consumer —
-        no standalone full-size materialization pass.
+        ``scales`` (optional) dequantizes a quantized payload: per-leaf
+        ``[J, num_leaves]`` rows by default (leaf li is multiplied by
+        ``scales[:, li]``), or — with ``scales_per_block`` — per-block
+        ``[J, num_blocks]`` rows on the layout's block grid (the fp8
+        codecs). The slice/scale/reshape chain is elementwise per leaf,
+        so XLA fuses it into the consumer — no standalone full-size
+        materialization pass.
         """
         j = buf.shape[0]
         out = []
+        if scales is not None and scales_per_block:
+            sv = jnp.repeat(scales, self.block_size, axis=-1,
+                            total_repeat_length=self.total)
         for li, lf in enumerate(self.leaves):
             seg = buf[:, lf.offset:lf.offset + lf.size]
             if scales is not None:
-                seg = seg.astype(jnp.float32) * scales[:, li:li + 1]
+                seg = seg.astype(jnp.float32) * (
+                    sv[:, lf.offset:lf.offset + lf.size] if scales_per_block
+                    else scales[:, li:li + 1])
             out.append(seg.reshape((j,) + lf.shape).astype(lf.dtype))
         return jax.tree_util.tree_unflatten(self.treedef, out)
 
@@ -205,30 +219,23 @@ class FlatLayout:
     def encode_int8(self, buf: jax.Array) -> jax.Array:
         """f32 [J, total] -> int8 wire [J, total + 4*num_leaves].
 
-        The payload is absmax-quantized per (node, leaf); the f32 scales are
-        bitcast to int8 and appended, so the whole wire message is ONE
-        contiguous int8 buffer — one collective-permute moves payload and
-        scales together.
+        Thin delegate into the ``int8`` wire codec (``repro.wire`` — the
+        format moved there verbatim): absmax-quantized per (node, leaf),
+        f32 scales bitcast to int8 and appended, so the whole message is
+        ONE contiguous int8 buffer.
         """
-        scales = self.leaf_scales(buf)                      # [J, L]
-        q = jnp.clip(jnp.round(buf / self.scale_vector(scales)),
-                     -127, 127).astype(jnp.int8)
-        tail = jax.lax.bitcast_convert_type(scales, jnp.int8)  # [J, L, 4]
-        return jnp.concatenate([q, tail.reshape(q.shape[0], -1)], axis=1)
+        from repro import wire
+        return wire.get_codec("int8", self).encode(buf)
 
     def decode_split(self, wire: jax.Array
                      ) -> tuple[jax.Array, jax.Array | None]:
         """int8 wire -> (payload [J, total] int8, scales [J, L] f32).
 
-        For an uncompressed (float) wire returns (wire, None).
+        For an uncompressed (float) wire returns (wire, None). Delegates
+        into the ``int8`` wire codec.
         """
-        if wire.dtype != jnp.int8:
-            return wire, None
-        payload = wire[:, :self.total]
-        tail = wire[:, self.total:].reshape(wire.shape[0],
-                                            self.num_leaves, 4)
-        scales = jax.lax.bitcast_convert_type(tail, jnp.float32)
-        return payload, scales
+        from repro import wire as wire_lib
+        return wire_lib.get_codec("int8", self).decode(wire)
 
     # ----------------------------------------------------------- shard ----
     def shard(self, n_shards: int) -> "ShardedLayout":
@@ -303,78 +310,48 @@ class ShardedLayout:
 
     # ------------------------------------------------------- wire widths ----
     def wire_width(self, compression: str) -> int:
-        """Elements in ONE shard's wire message."""
-        if compression == "int8":
-            return self.shard_total + 4 * self.layout.num_leaves
-        return self.shard_total
+        """Elements in ONE shard's wire message (any codec name)."""
+        from repro import wire
+        codec = wire.get_codec(compression, self.layout, self)
+        return codec.shard_wire_width
 
     def wire_row_bytes(self, compression: str) -> int:
         """Bytes of ONE shard's wire message — the per-device slab a
         permute moves and a ledger row holds. The single source of truth
         for per-device sharded wire accounting (mirrors
         ``FlatLayout.wire_bytes``'s role for the unsharded row)."""
-        if compression == "int8":
-            return self.wire_width("int8")
-        return self.shard_total * jnp.dtype(self.layout.wire_dtype).itemsize
+        from repro import wire
+        return wire.get_codec(compression, self.layout, self).wire_row_bytes()
 
     def wire_bytes(self, compression: str) -> int:
         """Bytes per node moved by ONE graph-offset permute (all shards).
 
-        The int8 wire pays the scale tail once PER SHARD (self-contained
-        slabs) instead of once per node.
+        Compressed wires pay their scale bytes once PER SHARD
+        (self-contained slabs); the fp8 per-block scales split with the
+        slabs, so only the int8 per-leaf tail actually replicates.
         """
-        return self.n_shards * self.wire_row_bytes(compression)
+        from repro import wire
+        return wire.get_codec(compression, self.layout, self).wire_bytes()
 
     # ------------------------------------------------------- wire codec ----
     def encode_int8(self, buf: jax.Array) -> jax.Array:
         """f32 [J, total] -> sharded int8 wire [J, n_shards * shard_w].
 
-        The quantized payload is IDENTICAL to ``FlatLayout.encode_int8``
-        (same per-(node, leaf) absmax scales — max reductions are exact, so
-        a cross-shard leaf quantizes the same bytes); only the placement of
-        the scale tail differs: bitcast and replicated per shard. Apart
-        from the per-leaf absmax (an in-pod max-reduce of the [J, L] scale
-        row — leaves cross shard boundaries), every op is
-        elementwise/reshape on the slab grid, so under a
-        ``P('pod', inner)`` sharding constraint each device quantizes and
-        lays out only its own slab.
+        Thin delegate into the ``int8`` wire codec (``repro.wire``): the
+        quantized payload is IDENTICAL to ``FlatLayout.encode_int8`` —
+        only the scale tail's placement differs (bitcast and replicated
+        per shard, so every per-device slab is self-contained).
         """
-        lay = self.layout
-        j = buf.shape[0]
-        # per-leaf absmax spans shard boundaries: under GSPMD this is an
-        # in-pod max-reduce of the [J, L] scale row per encode (max is
-        # exact, so the scales — and the payload — stay bit-identical to
-        # the unsharded encode); everything downstream of the scales is
-        # elementwise/reshape on the slab grid, i.e. slab-local
-        scales = lay.leaf_scales(buf)                      # [J, L]
-        q = jnp.clip(jnp.round(buf / lay.scale_vector(scales)),
-                     -127, 127).astype(jnp.int8)
-        qr = q.reshape(j, self.n_shards, self.shard_total)
-        tail = jax.lax.bitcast_convert_type(scales, jnp.int8)  # [J, L, 4]
-        tails = jnp.broadcast_to(tail.reshape(j, 1, -1),
-                                 (j, self.n_shards, 4 * lay.num_leaves))
-        wire = jnp.concatenate([qr, tails], axis=2)
-        return wire.reshape(j, self.n_shards * self.wire_width("int8"))
+        from repro import wire
+        return wire.get_codec("int8", self.layout, self).encode(buf)
 
     def split_wire(self, wire: jax.Array
                    ) -> tuple[jax.Array, jax.Array | None]:
         """Sharded wire -> (payload [J, total], scales [J, L] | None).
 
-        The payload peel is elementwise on the slab grid (each device
-        slices its own slab); ``scales`` is read from shard 0's tail —
-        the per-shard copies are identical, so under GSPMD this is one
-        4*L-byte in-pod broadcast (see the class docstring for why the
-        tails are still replicated per shard). For an uncompressed
+        Delegates into the ``int8`` wire codec. For an uncompressed
         (float) wire — which carries no tails — returns ``(wire, None)``
         untouched, like ``FlatLayout.decode_split``.
         """
-        if wire.dtype != jnp.int8:
-            return wire, None
-        lay = self.layout
-        j = wire.shape[0]
-        w = self.wire_width("int8")
-        rows = wire.reshape(j, self.n_shards, w)
-        payload = rows[:, :, :self.shard_total].reshape(j, lay.total)
-        tail = rows[:, 0, self.shard_total:].reshape(j, lay.num_leaves, 4)
-        scales = jax.lax.bitcast_convert_type(tail, jnp.float32)
-        return payload, scales
+        from repro import wire as wire_lib
+        return wire_lib.get_codec("int8", self.layout, self).decode(wire)

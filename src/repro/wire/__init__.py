@@ -1,0 +1,50 @@
+"""Pluggable wire-codec subsystem for the consensus exchange.
+
+``get_codec(name, layout, slayout=None)`` builds the codec every
+producer/consumer shares — the trainer's encode/decode, the async wire
+ledger's row sizing, the dryrun roofline's wire accounting and the
+benchmarks. ``WIRE_CODECS`` is the launcher-facing name list
+(``--wire-codec``); ``resolve_codec_name`` also accepts the legacy
+``ConsensusConfig.compression`` spellings (``"none"``/``""`` -> native).
+
+See ``docs/wire_formats.md`` for the formats themselves.
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from repro.wire.codec import (DequantSpec, Fp8Codec, Int8Codec, NativeCodec,
+                              WireCodec)
+
+WIRE_CODECS = ("native", "int8", "fp8_e4m3", "fp8_e5m2")
+
+# legacy ConsensusConfig.compression spellings
+_ALIASES = {"": "native", "none": "native"}
+
+_FP8_DTYPES = {"fp8_e4m3": jnp.float8_e4m3fn, "fp8_e5m2": jnp.float8_e5m2}
+
+
+def resolve_codec_name(spec: str) -> str:
+    """Codec or legacy-compression name -> canonical codec name."""
+    name = _ALIASES.get(spec, spec)
+    if name not in WIRE_CODECS:
+        raise ValueError(f"unknown wire codec {spec!r} "
+                         f"(known: {WIRE_CODECS} + legacy 'none')")
+    return name
+
+
+def get_codec(name: str, layout, slayout=None) -> WireCodec:
+    """Build the codec for a ``FlatLayout`` (+ optional ``ShardedLayout``).
+
+    Codecs are stateless views — building one per call site is free.
+    """
+    name = resolve_codec_name(name)
+    if name == "native":
+        return NativeCodec(layout, slayout)
+    if name == "int8":
+        return Int8Codec(layout, slayout)
+    return Fp8Codec(layout, slayout, name=name, qdtype=_FP8_DTYPES[name])
+
+
+__all__ = ["WIRE_CODECS", "DequantSpec", "Fp8Codec", "Int8Codec",
+           "NativeCodec", "WireCodec", "get_codec", "resolve_codec_name"]

@@ -1,0 +1,347 @@
+"""Wire codecs: how a packed flat buffer becomes bytes on the DCN.
+
+The consensus engine's exchange moves ONE contiguous wire message per node
+per graph offset (``docs/consensus_engine.md``). Historically the message
+format was hard-coded in two places — ``FlatLayout.encode_int8`` (payload +
+bitcast f32 scale tail) and ``ShardedLayout``'s per-shard variant — so each
+new format forked the sync round, the async ``WireLedger`` and the dryrun
+accounting. This module makes the format a pluggable **codec** behind the
+transport (the same separation 1-bit-Adam / PowerSGD-style compression
+stacks use, see PAPERS.md):
+
+  * ``native``    — the packed buffer itself, in the params' common float
+                    dtype (bf16 params = 2 B/param). Today's default.
+  * ``int8``      — absmax per (node, leaf), f32 scales bitcast to an int8
+                    tail. The pre-codec format, MOVED here verbatim:
+                    payloads stay byte-identical (pinned by test).
+  * ``fp8_e4m3``  — 1 B/param float8 (e4m3fn) payload with **per-block**
+  * ``fp8_e5m2``    f32 scales aligned to the ``FlatLayout`` block grid,
+                    so the fused kernel dequants each block from one SMEM
+                    scalar indexed by its own program id — no block->leaf
+                    table lookup, and on hardware with native fp8 the
+                    dequant multiply is the only extra op.
+
+A codec owns FOUR things (the interface every producer/consumer goes
+through — trainer rounds, async ledger rows, dryrun roofline, benchmarks):
+
+  * ``encode(buf)``          — [J, total] float -> [J, wire_width] message
+  * ``decode(wire)``         — message -> (payload [J, total], scales|None)
+  * ``wire_bytes()``         — bytes per node moved by one offset permute
+  * ``kernel_dequant_spec()``— what the fused kernel needs to dequantize:
+                               scale granularity (per-leaf vs per-block)
+                               and the SMEM scale-row width.
+
+Sharding: constructed with a ``ShardedLayout``, a codec emits the sharded
+message — per-shard slabs, each self-contained (its own scale bytes), so a
+device's ledger row decodes from local bytes only. The int8 tail replicates
+per shard (leaf scales span shards); the fp8 per-block scales SPLIT with
+the block grid, so the sharded fp8 message carries zero redundancy and the
+scale rows shard over the in-pod axes like the payload.
+
+All codecs are stateless views over a ``FlatLayout``; only buffer contents
+are traced.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+
+class DequantSpec(NamedTuple):
+    """What ``kernels.consensus_round`` needs to dequantize a wire payload.
+
+    ``per_block=False``: scales are per (node, leaf) — the kernel resolves
+    block b's scale through the block->leaf table (``scales[leaf_of[b]]``).
+    ``per_block=True``: scales are per (node, block) on the layout's block
+    grid — block b's scale is ``scales[b]`` directly (and under the sharded
+    engine the scale rows shard with the slabs, so the local block id still
+    indexes correctly).
+    """
+
+    per_block: bool
+    scale_width: int            # trailing dim of the [J, scale_width] rows
+
+
+class WireCodec:
+    """Base codec: a stateless view over a layout (+ optional shard view)."""
+
+    name = "?"
+
+    def __init__(self, layout, slayout=None):
+        self.layout = layout
+        self.slayout = slayout          # flatten.ShardedLayout | None
+
+    # ------------------------------------------------------------ sizes ----
+    @property
+    def wire_dtype(self):
+        """Dtype of the wire message (what permutes move, ledgers hold)."""
+        raise NotImplementedError
+
+    @property
+    def payload_dtype(self):
+        """Dtype of the decoded payload fed to the fused kernel."""
+        return self.wire_dtype
+
+    @property
+    def shard_wire_width(self) -> int:
+        """Elements in ONE shard's self-contained message (sharded only)."""
+        raise NotImplementedError
+
+    @property
+    def wire_width(self) -> int:
+        """Elements in one node's whole wire message."""
+        if self.slayout is not None:
+            return self.slayout.n_shards * self.shard_wire_width
+        return self._unsharded_width
+
+    def wire_row_bytes(self) -> int:
+        """Bytes of the per-DEVICE row one permute moves / a ledger row
+        holds: one shard's message when sharded, the whole message else."""
+        w = self.shard_wire_width if self.slayout is not None \
+            else self._unsharded_width
+        return w * jnp.dtype(self.wire_dtype).itemsize
+
+    def wire_bytes(self) -> int:
+        """Bytes per NODE moved by ONE graph-offset permute — the single
+        source of truth for wire accounting (dryrun roofline, benchmarks,
+        ledger sizing all read this)."""
+        n = self.slayout.n_shards if self.slayout is not None else 1
+        return n * self.wire_row_bytes()
+
+    # -------------------------------------------------------- interface ----
+    def encode(self, buf: jax.Array) -> jax.Array:
+        raise NotImplementedError
+
+    def decode(self, wire: jax.Array):
+        raise NotImplementedError
+
+    def kernel_dequant_spec(self) -> DequantSpec:
+        raise NotImplementedError
+
+    @property
+    def scale_width(self) -> int:
+        return self.kernel_dequant_spec().scale_width
+
+    def unpack(self, payload: jax.Array, scales=None):
+        """Decoded (payload, scales) -> dequantized parameter pytree (the
+        probe path). Elementwise per leaf, so XLA fuses it into consumers."""
+        spec = self.kernel_dequant_spec()
+        return self.layout.unpack(payload, scales=scales,
+                                  scales_per_block=spec.per_block)
+
+
+class NativeCodec(WireCodec):
+    """Uncompressed wire: the packed buffer in the params' float dtype."""
+
+    name = "native"
+
+    @property
+    def wire_dtype(self):
+        return self.layout.wire_dtype
+
+    @property
+    def _unsharded_width(self) -> int:
+        return self.layout.total
+
+    @property
+    def shard_wire_width(self) -> int:
+        return self.slayout.shard_total
+
+    def encode(self, buf):
+        return buf
+
+    def decode(self, wire):
+        return wire, None
+
+    def kernel_dequant_spec(self):
+        # scales are all-ones placeholders resolved per leaf — the exact
+        # pre-codec shapes, keeping the native path bit-identical
+        return DequantSpec(per_block=False,
+                           scale_width=self.layout.num_leaves)
+
+
+class Int8Codec(WireCodec):
+    """Absmax int8 per (node, leaf), f32 scales bitcast to an in-band tail.
+
+    This is the pre-codec wire format moved verbatim from
+    ``optim.flatten`` (which now delegates here): the payload is
+    absmax-quantized per (node, leaf); the f32 scales are bitcast to int8
+    and appended, so the whole message is ONE contiguous int8 buffer — one
+    collective-permute moves payload and scales together.
+
+    Sharded: the quantized payload is IDENTICAL to the unsharded encode
+    (max reductions are exact, so a cross-shard leaf quantizes the same
+    bytes); only the scale tail's placement differs — bitcast and
+    REPLICATED per shard (4*num_leaves bytes each, noise next to the
+    payload), which makes every per-device slab self-contained: the bytes
+    a device holds (or keeps in its wire-ledger row) suffice to dequantize
+    its slab — what a per-device decoder / RDMA mailbox needs on real
+    hardware. Apart from the per-leaf absmax (an in-pod max-reduce of the
+    [J, L] scale row — leaves cross shard boundaries), every op is
+    elementwise/reshape on the slab grid, so under a ``P('pod', inner)``
+    sharding constraint each device quantizes and lays out only its slab.
+    """
+
+    name = "int8"
+
+    @property
+    def wire_dtype(self):
+        return jnp.int8
+
+    @property
+    def _unsharded_width(self) -> int:
+        return self.layout.total + 4 * self.layout.num_leaves
+
+    @property
+    def shard_wire_width(self) -> int:
+        return self.slayout.shard_total + 4 * self.layout.num_leaves
+
+    def encode(self, buf):
+        lay = self.layout
+        scales = lay.leaf_scales(buf)                      # [J, L]
+        q = jnp.clip(jnp.round(buf / lay.scale_vector(scales)),
+                     -127, 127).astype(jnp.int8)
+        tail = jax.lax.bitcast_convert_type(scales, jnp.int8)  # [J, L, 4]
+        j = q.shape[0]
+        if self.slayout is None:
+            return jnp.concatenate([q, tail.reshape(j, -1)], axis=1)
+        s = self.slayout
+        qr = q.reshape(j, s.n_shards, s.shard_total)
+        tails = jnp.broadcast_to(tail.reshape(j, 1, -1),
+                                 (j, s.n_shards, 4 * lay.num_leaves))
+        wire = jnp.concatenate([qr, tails], axis=2)
+        return wire.reshape(j, s.n_shards * self.shard_wire_width)
+
+    def decode(self, wire):
+        """int8 wire -> (payload [J, total] int8, scales [J, L] f32).
+
+        For an uncompressed (float) wire returns ``(wire, None)`` — the
+        historical ``decode_split`` contract some callers rely on.
+        Sharded: the payload peel is elementwise on the slab grid (each
+        device slices its own slab); ``scales`` is read from shard 0's
+        tail — the per-shard copies are identical, so under GSPMD this is
+        one 4*L-byte in-pod broadcast, noise next to the slab payloads.
+        """
+        if wire.dtype != jnp.int8:
+            return wire, None
+        lay = self.layout
+        j = wire.shape[0]
+        if self.slayout is None:
+            payload = wire[:, :lay.total]
+            tail = wire[:, lay.total:].reshape(j, lay.num_leaves, 4)
+            return payload, jax.lax.bitcast_convert_type(tail, jnp.float32)
+        s = self.slayout
+        w = self.shard_wire_width
+        rows = wire.reshape(j, s.n_shards, w)
+        payload = rows[:, :, :s.shard_total].reshape(j, lay.total)
+        tail = rows[:, 0, s.shard_total:].reshape(j, lay.num_leaves, 4)
+        return payload, jax.lax.bitcast_convert_type(tail, jnp.float32)
+
+    def kernel_dequant_spec(self):
+        return DequantSpec(per_block=False,
+                           scale_width=self.layout.num_leaves)
+
+
+class Fp8Codec(WireCodec):
+    """float8 payload (1 B/param) with per-block f32 scales on the layout's
+    block grid.
+
+    Per block of ``block_size`` elements: ``scale = absmax / fp8_max``
+    (floored so zero blocks stay decodable), payload = ``buf / scale``
+    cast to the fp8 format. The f32 scales are bitcast to int8 and
+    appended, so — like the int8 wire — the whole message is one
+    contiguous int8 buffer (the fp8 payload bitcasts losslessly through
+    the int8 container; ``decode`` bitcasts it back before the kernel's
+    f32 upcast).
+
+    Because scale granularity IS the kernel's block grid, the fused round
+    dequants block b from ``scales[b]`` — one SMEM scalar per block, no
+    block->leaf indirection — and under the sharded engine the scale rows
+    split exactly with the slabs: each shard's tail carries only ITS
+    blocks' scales (4 bytes/block), zero cross-shard redundancy, and
+    decode stays slab-local without any in-pod broadcast.
+
+    NOTE: XLA's f32 -> f8 conversion does NOT saturate in this jax pin
+    (overflow becomes nan), so the scaled payload is clipped to the
+    format's finite range before the cast. With absmax scaling the clip
+    only catches round-off at the extremes.
+    """
+
+    def __init__(self, layout, slayout=None, *, name, qdtype):
+        super().__init__(layout, slayout)
+        self.name = name
+        self.qdtype = jnp.dtype(qdtype)
+        self.fp8_max = float(jnp.finfo(qdtype).max)
+
+    @property
+    def wire_dtype(self):
+        return jnp.int8                 # container: payload + scale bytes
+
+    @property
+    def payload_dtype(self):
+        return self.qdtype
+
+    @property
+    def _unsharded_width(self) -> int:
+        return self.layout.total + 4 * self.layout.num_blocks
+
+    @property
+    def shard_wire_width(self) -> int:
+        return self.slayout.shard_total + 4 * self.slayout.blocks_per_shard
+
+    # ------------------------------------------------------------ scales ----
+    def block_scales(self, buf: jax.Array) -> jax.Array:
+        """Per-(node, block) absmax scales [J, num_blocks] (f32)."""
+        lay = self.layout
+        j = buf.shape[0]
+        if lay.num_blocks == 0:
+            return jnp.zeros((j, 0), jnp.float32)
+        blocks = buf.astype(jnp.float32).reshape(j, lay.num_blocks,
+                                                 lay.block_size)
+        # initial=0.0 keeps all-padding blocks from reducing over nothing
+        amax = jnp.abs(blocks).max(axis=2, initial=0.0)
+        return (jnp.maximum(amax, 1e-12) / self.fp8_max).astype(jnp.float32)
+
+    def scale_vector(self, scales: jax.Array) -> jax.Array:
+        """Per-block scales [..., num_blocks] -> full width [..., total]."""
+        return jnp.repeat(scales, self.layout.block_size, axis=-1,
+                          total_repeat_length=self.layout.total)
+
+    # ----------------------------------------------------- encode/decode ----
+    def encode(self, buf):
+        lay = self.layout
+        j = buf.shape[0]
+        scales = self.block_scales(buf)                    # [J, NB]
+        scaled = buf.astype(jnp.float32) / self.scale_vector(scales)
+        q = jnp.clip(scaled, -self.fp8_max, self.fp8_max).astype(self.qdtype)
+        qb = jax.lax.bitcast_convert_type(q, jnp.int8)     # [J, total]
+        tail = jax.lax.bitcast_convert_type(scales, jnp.int8)  # [J, NB, 4]
+        if self.slayout is None:
+            return jnp.concatenate([qb, tail.reshape(j, -1)], axis=1)
+        s = self.slayout
+        qr = qb.reshape(j, s.n_shards, s.shard_total)
+        tr = tail.reshape(j, s.n_shards, 4 * s.blocks_per_shard)
+        wire = jnp.concatenate([qr, tr], axis=2)
+        return wire.reshape(j, s.n_shards * self.shard_wire_width)
+
+    def decode(self, wire):
+        lay = self.layout
+        j = wire.shape[0]
+        if self.slayout is None:
+            payload = jax.lax.bitcast_convert_type(wire[:, :lay.total],
+                                                   self.qdtype)
+            tail = wire[:, lay.total:].reshape(j, lay.num_blocks, 4)
+            return payload, jax.lax.bitcast_convert_type(tail, jnp.float32)
+        s = self.slayout
+        w = self.shard_wire_width
+        rows = wire.reshape(j, s.n_shards, w)
+        payload = jax.lax.bitcast_convert_type(
+            rows[:, :, :s.shard_total].reshape(j, lay.total), self.qdtype)
+        tail = rows[:, :, s.shard_total:].reshape(j, lay.num_blocks, 4)
+        return payload, jax.lax.bitcast_convert_type(tail, jnp.float32)
+
+    def kernel_dequant_spec(self):
+        return DequantSpec(per_block=True,
+                           scale_width=self.layout.num_blocks)

@@ -28,6 +28,14 @@ def draw_topology(rng, j: int) -> str:
     return str(rng.choice(["complete", "ring", "cluster", "chain", "star"]))
 
 
+def draw_codec(rng) -> str:
+    """Draw a wire-codec name (repro.wire.WIRE_CODECS), quantized-heavy:
+    the native codec is a passthrough, so most draws should exercise a
+    scale-carrying format."""
+    return str(rng.choice(["native", "int8", "int8",
+                           "fp8_e4m3", "fp8_e4m3", "fp8_e5m2"]))
+
+
 def draw_param_tree(rng, *, j: int | None = None, max_leaves: int = 6,
                     max_elems: int = 2000, allow_empty: bool = True):
     """Random FlatLayout-shaped pytree: odd leaf sizes, mixed bf16/f32

@@ -1,0 +1,171 @@
+"""Unit tests for the CI benchmark-regression gate
+(benchmarks/check_regression.py) — synthetic baseline/fresh pairs, no
+devices needed. The gate's contract:
+
+  * rows matched by key (tag / topology+scheduler / wire_frac); rows only
+    on one side are reported, never failed (smoke grids run subsets);
+  * per-metric tolerance kinds: ratio (timing), floor (speedups), abs
+    (fractions), exact (byte accounting);
+  * missing artifacts skip their file (the gate checks only what the
+    preceding CI cells produced);
+  * the report embeds BOTH documents — one diffable failure artifact.
+"""
+import json
+import os
+import sys
+
+import pytest
+
+sys.path.insert(0, os.path.join(os.path.dirname(os.path.dirname(
+    os.path.abspath(__file__)))))
+
+from benchmarks import check_regression as cr  # noqa: E402
+
+
+def _write(dirpath, name, doc):
+    os.makedirs(dirpath, exist_ok=True)
+    with open(os.path.join(dirpath, name), "w") as f:
+        json.dump(doc, f)
+
+
+def _consensus(round_ms, wire_bytes, fused_vs_unfused=0.5):
+    return {"rounds": {"fused_none": {"round_ms": round_ms,
+                                      "wire_bytes_per_round": wire_bytes}},
+            "fused_vs_unfused": fused_vs_unfused}
+
+
+def _topology(iters, active=0.2):
+    return {"rows": [{"topology": "ring", "scheduler": "budget",
+                      "iters_median": iters, "active_final": active,
+                      "err_median": 1e-4}]}
+
+
+def _async(speedup, drift=0.004):
+    return {"rows": [{"wire_frac": 0.5, "speedup": speedup,
+                      "ticks_async": 6}],
+            "objective_drift": drift}
+
+
+def test_identical_results_pass(tmp_path):
+    base, fresh = str(tmp_path / "base"), str(tmp_path / "fresh")
+    _write(base, "BENCH_consensus.json", _consensus(50.0, 1000))
+    _write(fresh, "BENCH_consensus.json", _consensus(50.0, 1000))
+    _write(base, "BENCH_topology.json", _topology(70))
+    _write(fresh, "BENCH_topology.json", _topology(70))
+    _write(base, "BENCH_async.json", _async(2.0))
+    _write(fresh, "BENCH_async.json", _async(2.0))
+    rep = cr.run(base, fresh)
+    assert rep["ok"] and rep["checks_run"] >= 6, rep
+
+
+def test_timing_noise_within_ratio_passes(tmp_path):
+    base, fresh = str(tmp_path / "b"), str(tmp_path / "f")
+    _write(base, "BENCH_consensus.json", _consensus(50.0, 1000))
+    _write(fresh, "BENCH_consensus.json", _consensus(150.0, 1000))  # 3x
+    rep = cr.run(base, fresh, names=["BENCH_consensus.json"])
+    assert rep["ok"], rep["failures"]
+
+
+def test_timing_blowup_fails(tmp_path):
+    base, fresh = str(tmp_path / "b"), str(tmp_path / "f")
+    _write(base, "BENCH_consensus.json", _consensus(50.0, 1000))
+    _write(fresh, "BENCH_consensus.json", _consensus(250.0, 1000))  # 5x
+    rep = cr.run(base, fresh, names=["BENCH_consensus.json"])
+    assert not rep["ok"]
+    assert rep["failures"][0]["metric"] == "round_ms"
+
+
+def test_unknown_tolerance_kind_raises(tmp_path):
+    """A typo'd CHECKS entry must fail loudly, not silently pass."""
+    with pytest.raises(ValueError):
+        cr._check_metric("x", "ration", 2.5, 1.0, 1.0)
+
+
+def test_wire_bytes_must_match_exactly(tmp_path):
+    """Byte accounting is exact: wire bytes only change through a
+    deliberate codec/layout change, which must update the baseline."""
+    base, fresh = str(tmp_path / "b"), str(tmp_path / "f")
+    _write(base, "BENCH_consensus.json", _consensus(50.0, 1000))
+    _write(fresh, "BENCH_consensus.json", _consensus(50.0, 1001))
+    rep = cr.run(base, fresh, names=["BENCH_consensus.json"])
+    assert not rep["ok"]
+    assert rep["failures"][0]["metric"] == "wire_bytes_per_round"
+
+
+def test_speedup_floor(tmp_path):
+    base, fresh = str(tmp_path / "b"), str(tmp_path / "f")
+    _write(base, "BENCH_async.json", _async(2.0))
+    _write(fresh, "BENCH_async.json", _async(1.6))      # >= 0.75x: OK
+    assert cr.run(base, fresh, names=["BENCH_async.json"])["ok"]
+    _write(fresh, "BENCH_async.json", _async(1.0))      # < 0.75x: fail
+    rep = cr.run(base, fresh, names=["BENCH_async.json"])
+    assert not rep["ok"]
+    assert rep["failures"][0]["metric"] == "speedup"
+
+
+def test_iteration_regression_fails(tmp_path):
+    base, fresh = str(tmp_path / "b"), str(tmp_path / "f")
+    _write(base, "BENCH_topology.json", _topology(70))
+    _write(fresh, "BENCH_topology.json", _topology(120))
+    rep = cr.run(base, fresh, names=["BENCH_topology.json"])
+    assert not rep["ok"]
+    assert rep["failures"][0]["metric"] == "iters_median"
+
+
+def test_subset_and_superset_rows_never_fail(tmp_path):
+    """Smoke grids run a subset of the baseline grid; extra fresh rows are
+    reported as unmatched, missing ones simply aren't checked."""
+    base, fresh = str(tmp_path / "b"), str(tmp_path / "f")
+    doc = _topology(70)
+    doc["rows"].append({"topology": "expander", "scheduler": "static",
+                        "iters_median": 43, "active_final": 1.0,
+                        "err_median": 0.0})
+    _write(base, "BENCH_topology.json", doc)
+    fresh_doc = _topology(70)
+    fresh_doc["rows"].append({"topology": "cluster", "scheduler": "random",
+                              "iters_median": 74, "active_final": 0.7,
+                              "err_median": 5e-4})
+    _write(fresh, "BENCH_topology.json", fresh_doc)
+    rep = cr.run(base, fresh, names=["BENCH_topology.json"])
+    assert rep["ok"], rep["failures"]
+    assert rep["reports"][0]["unmatched_rows"] == ["('cluster', 'random')"]
+
+
+def test_missing_fresh_artifact_skips(tmp_path):
+    base, fresh = str(tmp_path / "b"), str(tmp_path / "f")
+    _write(base, "BENCH_async.json", _async(2.0))
+    os.makedirs(fresh, exist_ok=True)
+    rep = cr.run(base, fresh, names=["BENCH_async.json"])
+    assert rep["ok"] and rep["checks_run"] == 0
+    assert "skipped" in rep["reports"][0]["status"]
+
+
+def test_report_embeds_both_documents(tmp_path):
+    """Failure diagnosis needs baseline AND fresh in ONE artifact."""
+    base, fresh = str(tmp_path / "b"), str(tmp_path / "f")
+    _write(base, "BENCH_consensus.json", _consensus(50.0, 1000))
+    _write(fresh, "BENCH_consensus.json", _consensus(400.0, 999))
+    rep = cr.run(base, fresh, names=["BENCH_consensus.json"])
+    r = rep["reports"][0]
+    assert r["status"] == "REGRESSION"
+    assert r["baseline_doc"]["rounds"]["fused_none"]["round_ms"] == 50.0
+    assert r["fresh_doc"]["rounds"]["fused_none"]["round_ms"] == 400.0
+
+
+def test_main_exit_codes_and_report_file(tmp_path):
+    base, fresh = str(tmp_path / "b"), str(tmp_path / "f")
+    _write(base, "BENCH_consensus.json", _consensus(50.0, 1000))
+    _write(fresh, "BENCH_consensus.json", _consensus(50.0, 1000))
+    rc = cr.main(["--baseline-dir", base, "--results-dir", fresh])
+    assert rc == 0
+    assert os.path.exists(os.path.join(fresh, "regression_report.json"))
+    _write(fresh, "BENCH_consensus.json", _consensus(50.0, 2000))
+    assert cr.main(["--baseline-dir", base, "--results-dir", fresh]) == 1
+
+
+def test_gate_covers_all_committed_baselines():
+    """Every committed root baseline has a tolerance spec in the gate."""
+    from benchmarks.common import REPO_ROOT
+    committed = [n for n in os.listdir(REPO_ROOT)
+                 if n.startswith("BENCH_") and n.endswith(".json")]
+    assert set(committed) == set(cr.CHECKS), (committed, set(cr.CHECKS))

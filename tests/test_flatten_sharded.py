@@ -17,9 +17,10 @@ import jax
 import jax.numpy as jnp
 import pytest
 
+from repro import wire
 from repro.optim import flatten
 
-from proptest import draw_param_tree, sweep
+from proptest import draw_codec, draw_param_tree, sweep
 
 
 def _layout_for(tree, bs, shards):
@@ -161,6 +162,185 @@ def test_sharded_wire_width_accounting():
             lay.total * jnp.dtype(lay.wire_dtype).itemsize
 
     sweep(prop, cases=20, seed=35)
+
+
+# ------------------------------------------------------- wire codecs ----
+_FP8_MANT = {"fp8_e4m3": 3, "fp8_e5m2": 2}
+
+
+def _dequant_bound(codec, scales):
+    """Per-element |dequant - original| bound of a codec's quantization."""
+    if codec.name == "int8":
+        sv = np.asarray(codec.layout.scale_vector(scales))
+        return 0.5 * sv + 1e-7
+    m = _FP8_MANT[codec.name]
+    sv = np.asarray(codec.scale_vector(scales))
+    # half-ulp relative error on normals (bounded by absmax = s * fp8_max)
+    # plus one scale unit covering the subnormal range near zero
+    return sv * (codec.fp8_max * 2.0 ** -(m + 1) + 1.0) + 1e-9
+
+
+def _dequant(codec, payload, scales):
+    sv = (codec.layout.scale_vector(scales) if codec.name == "int8"
+          else codec.scale_vector(scales))
+    return np.asarray(payload.astype(jnp.float32) * sv)
+
+
+def test_codec_roundtrip_randomized():
+    """Satellite pin: every codec round-trips every randomized tree (odd /
+    scalar / empty leaves, mixed bf16/f32, block 128..64k), sharded and
+    unsharded, within its format's quantization bound."""
+    def prop(rng, i):
+        tree, j, bs, n_shards = _draw_case(rng)
+        lay = _layout_for(tree, bs, n_shards)
+        slay = lay.shard(n_shards)
+        buf = lay.pack(tree)
+        name = draw_codec(rng)
+        for sl in (None, slay):
+            c = wire.get_codec(name, lay, sl)
+            w = c.encode(buf)
+            assert w.shape == (j, c.wire_width), (name, w.shape)
+            assert w.dtype == c.wire_dtype
+            assert c.wire_bytes() == \
+                c.wire_width * jnp.dtype(c.wire_dtype).itemsize
+            payload, scales = c.decode(w)
+            assert payload.shape == buf.shape
+            assert payload.dtype == c.payload_dtype
+            if name == "native":
+                assert scales is None
+                np.testing.assert_array_equal(np.asarray(payload),
+                                              np.asarray(buf))
+                continue
+            spec = c.kernel_dequant_spec()
+            assert scales.shape == (j, spec.scale_width), (name, spec)
+            assert spec.per_block == name.startswith("fp8")
+            err = np.abs(_dequant(c, payload, scales) - np.asarray(buf))
+            assert (err <= _dequant_bound(c, scales)).all(), \
+                (name, sl is not None, float(err.max()))
+            # probe-side unpack dequantizes to the same values per leaf
+            back = c.unpack(payload, scales)
+            for orig, got in zip(tree, back):
+                assert got.dtype == orig.dtype
+                a = np.asarray(orig, np.float32)
+                b = np.asarray(got, np.float32)
+                # extra 2^-8 relative slack: bf16 leaves re-round on cast
+                bound = (_dequant_bound(c, scales).max()
+                         + np.abs(a) * 2.0 ** -8 + 1e-7)
+                assert (np.abs(a - b) <= bound).all(), name
+
+    sweep(prop, cases=20, seed=36)
+
+
+def _legacy_int8_wire(lay, buf):
+    """The PRE-CODEC int8 tail format, reimplemented from scratch — the
+    independent oracle pinning ``int8`` via the codec byte-identical to
+    the format main shipped before the wire subsystem existed."""
+    b = np.asarray(buf, np.float32)
+    j = b.shape[0]
+    cols = []
+    for lf in lay.leaves:
+        seg = b[:, lf.offset:lf.offset + lf.size]
+        amax = np.abs(seg).max(axis=1, initial=0.0)
+        cols.append(np.maximum(amax, np.float32(1e-12)) / np.float32(127.0))
+    scales = np.stack(cols, axis=1).astype(np.float32)
+    sv = np.repeat(scales[:, lay.block_leaf], lay.block_size,
+                   axis=1)[:, :lay.total]
+    q = np.clip(np.round(b / sv), -127, 127).astype(np.int8)
+    tail = scales.view(np.int8).reshape(j, -1)      # little-endian bitcast
+    return q, scales, np.concatenate([q, tail], axis=1)
+
+
+def test_int8_codec_byte_identical_to_pre_refactor_tail_format():
+    """Acceptance pin: routing int8 through the codec subsystem produces
+    byte-identical wire payloads — checked against a from-scratch
+    reimplementation of the old tail format, NOT against the moved code."""
+    def prop(rng, i):
+        tree, j, bs, n_shards = _draw_case(rng)
+        lay = _layout_for(tree, bs, n_shards)
+        buf = lay.pack(tree)
+        q, scales, legacy = _legacy_int8_wire(lay, buf)
+        got = np.asarray(wire.get_codec("int8", lay).encode(buf))
+        np.testing.assert_array_equal(got, legacy)
+        # sharded message: same payload slabs, the same tail per shard
+        slay = lay.shard(n_shards)
+        got_s = np.asarray(wire.get_codec("int8", lay, slay).encode(buf))
+        w = slay.wire_width("int8")
+        rows = got_s.reshape(j, slay.n_shards, w)
+        tail = scales.view(np.int8).reshape(j, -1)
+        for s in slay.shards:
+            np.testing.assert_array_equal(
+                rows[:, s.index, :slay.shard_total],
+                q[:, s.start:s.start + s.size])
+            np.testing.assert_array_equal(rows[:, s.index,
+                                               slay.shard_total:], tail)
+
+    sweep(prop, cases=15, seed=37)
+
+
+def test_sharded_codec_payload_bytes_match_unsharded():
+    """Satellite pin: per codec, the sharded message carries the SAME
+    payload bytes as the unsharded one (slab-sliced) and decodes to the
+    identical (payload, scales) pair — resharding never re-quantizes."""
+    def prop(rng, i):
+        tree, j, bs, n_shards = _draw_case(rng)
+        lay = _layout_for(tree, bs, n_shards)
+        slay = lay.shard(n_shards)
+        buf = lay.pack(tree)
+        for name in wire.WIRE_CODECS:
+            c_full = wire.get_codec(name, lay)
+            c_sh = wire.get_codec(name, lay, slay)
+            p_full, s_full = c_full.decode(c_full.encode(buf))
+            wire_sh = c_sh.encode(buf)
+            p_sh, s_sh = c_sh.decode(wire_sh)
+            np.testing.assert_array_equal(
+                np.asarray(p_sh, np.float32), np.asarray(p_full, np.float32))
+            if s_full is None:
+                assert s_sh is None
+                continue
+            np.testing.assert_array_equal(np.asarray(s_sh),
+                                          np.asarray(s_full))
+            # slab payload bytes == the unsharded payload slice
+            rows = np.asarray(wire_sh).reshape(j, n_shards,
+                                               c_sh.shard_wire_width)
+            raw_full = np.asarray(
+                c_full.encode(buf))[:, :lay.total]     # quantized bytes
+            for s in slay.shards:
+                np.testing.assert_array_equal(
+                    rows[:, s.index, :slay.shard_total],
+                    raw_full[:, s.start:s.start + s.size])
+
+    sweep(prop, cases=10, seed=38)
+
+
+def test_codec_wire_width_accounting():
+    """Wire widths/bytes per codec: native = itemsize*total, int8 pays one
+    4*L tail per shard, fp8 = 1 B/param + 4 B/block with scales splitting
+    exactly across shards (zero sharding overhead)."""
+    def prop(rng, i):
+        tree, j, bs, n_shards = _draw_case(rng)
+        lay = _layout_for(tree, bs, n_shards)
+        slay = lay.shard(n_shards)
+        nat = wire.get_codec("native", lay)
+        assert nat.wire_bytes() == \
+            lay.total * jnp.dtype(lay.wire_dtype).itemsize
+        i8 = wire.get_codec("int8", lay)
+        assert i8.wire_bytes() == lay.total + 4 * lay.num_leaves
+        i8s = wire.get_codec("int8", lay, slay)
+        assert i8s.wire_bytes() == \
+            lay.total + 4 * lay.num_leaves * n_shards
+        for name in ("fp8_e4m3", "fp8_e5m2"):
+            f8 = wire.get_codec(name, lay)
+            f8s = wire.get_codec(name, lay, slay)
+            assert f8.wire_bytes() == lay.total + 4 * lay.num_blocks
+            assert f8s.wire_bytes() == f8.wire_bytes()   # scales split
+            assert f8s.shard_wire_width * n_shards == f8.wire_width
+        # the ledger sizes its rows off the same accounting
+        from repro.async_exec.ledger import wire_width as ledger_width
+        for name in wire.WIRE_CODECS:
+            assert ledger_width(lay, name, slay) == \
+                wire.get_codec(name, lay, slay).wire_width
+
+    sweep(prop, cases=15, seed=39)
 
 
 def test_empty_and_scalar_leaves_survive_int8():
