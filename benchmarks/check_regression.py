@@ -2,7 +2,8 @@
 
 Compares freshly written ``benchmarks/results/BENCH_*.json`` artifacts
 against the repo-root committed baselines (``BENCH_consensus.json``,
-``BENCH_topology.json``, ``BENCH_async.json``) with per-metric tolerances,
+``BENCH_topology.json``, ``BENCH_async.json``, ``BENCH_obs.json``)
+with per-metric tolerances,
 and exits non-zero when a metric regresses. CI runs it as a step after the
 smoke cells; the single report it writes
 (``benchmarks/results/regression_report.json``) embeds BOTH the baseline
@@ -58,6 +59,14 @@ CHECKS = {
             "err_median": ("abs", 5e-3),
         },
         "scalars": {},
+    },
+    "BENCH_obs.json": {
+        "rows_key": "rounds",            # obs_off / obs_on -> round_ms
+        "metrics": {"round_ms": ("ratio", 4.0)},
+        # THE obs acceptance gate: the metrics ring + spans may cost at
+        # most 3 percentage points of round time over the committed
+        # baseline overhead (which the full run measures at ~0)
+        "scalars": {"obs_overhead_ratio": ("abs", 0.03)},
     },
     "BENCH_async.json": {
         "rows_key": "rows",

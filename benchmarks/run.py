@@ -23,7 +23,7 @@ def main(argv=None) -> None:
     ap.add_argument("--only", default="all",
                     choices=["all", "fig2", "fig3", "hopkins", "roofline",
                              "consensus", "lm_ablation", "topology",
-                             "async"])
+                             "async", "obs"])
     args = ap.parse_args(argv)
     seeds = 20 if args.full else 3
 
@@ -169,6 +169,34 @@ def main(argv=None) -> None:
             promote("BENCH_async.json")
         else:
             record("async_bench", "FAILED",
+                   proc.stderr.strip().splitlines()[-1][:80]
+                   if proc.stderr.strip() else "no stderr")
+
+    if args.only in ("all", "obs"):
+        # own subprocess: needs the 8-device env like the consensus cell
+        import os
+        import subprocess
+        env = dict(os.environ)
+        env.setdefault("XLA_FLAGS",
+                       "--xla_force_host_platform_device_count=8")
+        proc = subprocess.run(
+            [sys.executable, "-m", "benchmarks.obs_overhead"],
+            capture_output=True, text=True, env=env, timeout=1800)
+        print(proc.stdout, end="")
+        if proc.returncode == 0:
+            import json
+            path = os.path.join(os.path.dirname(__file__), "results",
+                                "BENCH_obs.json")
+            if os.path.exists(path):
+                with open(path) as f:
+                    bench = json.load(f)
+                record("obs_overhead_pct",
+                       round(100 * bench["obs_overhead_ratio"], 2),
+                       f"on={bench['rounds']['obs_on']['round_ms']}ms "
+                       f"off={bench['rounds']['obs_off']['round_ms']}ms")
+            promote("BENCH_obs.json")
+        else:
+            record("obs_bench", "FAILED",
                    proc.stderr.strip().splitlines()[-1][:80]
                    if proc.stderr.strip() else "no stderr")
 

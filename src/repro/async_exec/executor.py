@@ -21,6 +21,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.async_exec.clock import RoundClock
+from repro.obs.trace import host_span_factory
 
 
 class AsyncExecutor:
@@ -48,6 +49,8 @@ class AsyncExecutor:
                              f"trainer has {trainer.num_nodes}")
         self.clock = clock
         self._cons = trainer.jit_async_step_fns()
+        self._hspan = host_span_factory(
+            trainer.obs_on and trainer.obs_cfg.with_spans)
 
     # ------------------------------------------------------------ state ----
     def init_state(self, key: jax.Array):
@@ -72,7 +75,8 @@ class AsyncExecutor:
             arr_np, adv_np = self.clock.tick()
             arrivals = jnp.asarray(arr_np)
             advance = jnp.asarray(adv_np)
-        state, metrics = self._cons(state, probe_batch, arrivals, advance)
+        with self._hspan("round/async"):
+            state, metrics = self._cons(state, probe_batch, arrivals, advance)
         return state, metrics
 
     # ------------------------------------------------------- accounting ----
@@ -98,3 +102,14 @@ class AsyncExecutor:
             "tick_s": round(c.tick_s, 6),
             "max_staleness": self.cfg.max_staleness,
         }
+
+    def export_timeline(self, path: str) -> str:
+        """Write the clock's modeled timeline as a Chrome/Perfetto trace.
+
+        Per-node compute and wire tracks reconstructed from the clock's
+        event model (``repro.obs.export``) — load the JSON in
+        https://ui.perfetto.dev next to a measured ``--profile-rounds``
+        trace to compare modeled and actual compute/wire overlap.
+        """
+        from repro.obs.export import write_roundclock_trace
+        return write_roundclock_trace(self.clock, path)

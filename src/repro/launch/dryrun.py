@@ -78,7 +78,8 @@ def collective_bytes(hlo_text: str) -> dict:
 
 def consensus_state_bytes(layout, *, deg: int, compression: str,
                           n_shards: int = 1,
-                          with_ledger: bool = False) -> dict:
+                          with_ledger: bool = False,
+                          obs_ring_cap: int = 0) -> dict:
     """Per-DEVICE bytes of the flat consensus state.
 
     Counts what one device materializes for its pod's node row: the f32
@@ -105,6 +106,11 @@ def consensus_state_bytes(layout, *, deg: int, compression: str,
            "wire_rows": deg * wire_row}
     if with_ledger:
         out["ledger_rows"] = deg * wire_row
+    if obs_ring_cap > 0:
+        # the on-device metrics ring (repro.obs): [cap, n_metrics] f32,
+        # replicated — a constant, layout-independent sliver of HBM
+        from repro.obs import schema as obs_schema
+        out["metrics_ring"] = 4 * obs_ring_cap * obs_schema.NUM_COLUMNS
     out["total"] = sum(out.values())
     return out
 
@@ -112,7 +118,9 @@ def consensus_state_bytes(layout, *, deg: int, compression: str,
 def fused_round_roofline(model: "Model", mesh, *, compression: str,
                          topology: str = "ring", block_size: int = 0,
                          dyn_topology=None, shard_consensus: bool = False,
-                         with_ledger: bool = False) -> dict:
+                         with_ledger: bool = False,
+                         obs_ring_cap: int = 0,
+                         obs_drain_every: int = 8) -> dict:
     """Analytic HBM/wire model of the fused flat-buffer consensus round.
 
     ``compression`` is any wire-codec name (``repro.wire.WIRE_CODECS``) or
@@ -193,6 +201,22 @@ def fused_round_roofline(model: "Model", mesh, *, compression: str,
     # offset plus a full dequant materialization (all f32, unsharded)
     naive_hbm = n * (2 * tb + 4 * 4) + deg * lay.wire_bytes(compression) \
         + deg * n * 4 * 3
+    # observability overhead (repro.obs, when enabled): the ring append is
+    # one [n_metrics] f32 row of HBM write per round; a drain pulls the
+    # whole [cap, n_metrics] buffer device->host once every K rounds.
+    # Both are constants — invisible next to the flat-buffer passes (the
+    # <= 3% measured gate lives in BENCH_obs.json).
+    obs_acct = {}
+    if obs_ring_cap > 0:
+        from repro.obs import schema as obs_schema
+        c_cols = obs_schema.NUM_COLUMNS
+        obs_acct = {"obs": {
+            "ring_hbm_bytes": 4 * obs_ring_cap * c_cols,
+            "ring_write_bytes_per_round": 4 * c_cols,
+            "drain_bytes_per_round":
+                4 * obs_ring_cap * c_cols // max(obs_drain_every, 1),
+            "drain_every": obs_drain_every,
+        }}
     return {
         "wire_codec": codec.name,
         "flat_elems": n, "block_size": bs, "blocks": lay.num_blocks,
@@ -214,11 +238,12 @@ def fused_round_roofline(model: "Model", mesh, *, compression: str,
         "consensus_state": {
             "per_device": consensus_state_bytes(
                 lay, deg=deg, compression=compression, n_shards=n_shards,
-                with_ledger=with_ledger),
+                with_ledger=with_ledger, obs_ring_cap=obs_ring_cap),
             "per_device_unsharded": consensus_state_bytes(
                 lay, deg=deg, compression=compression, n_shards=1,
-                with_ledger=with_ledger),
+                with_ledger=with_ledger, obs_ring_cap=obs_ring_cap),
         },
+        **obs_acct,
     }
 
 
@@ -276,12 +301,23 @@ KNOBS = {
     "probe_frac": 1,         # probe-batch reduction for the consensus round
     "topo_scheduler": "static",  # dynamic-topology edge scheduler
     "shard_consensus": False,    # in-pod sharded flat consensus state
+    "obs_ring_cap": 0,           # obs metrics-ring rows; 0 = obs off
+    "obs_drain_every": 8,        # obs host-drain cadence (rounds)
 }
 
 
 def _knob_codec() -> str:
     """The wire-codec spec the KNOBS currently select."""
     return KNOBS["wire_codec"] or KNOBS["compression"]
+
+
+def _knob_obs_config():
+    """The ObsConfig the KNOBS select (None = obs compiled out)."""
+    if KNOBS["obs_ring_cap"] <= 0:
+        return None
+    from repro.obs import ObsConfig
+    return ObsConfig(ring_capacity=KNOBS["obs_ring_cap"],
+                     drain_every=KNOBS["obs_drain_every"])
 
 
 def _compile_step(cfg: ArchConfig, cell: ShapeCell, mesh, *,
@@ -312,7 +348,8 @@ def _compile_step(cfg: ArchConfig, cell: ShapeCell, mesh, *,
                     grad_rs=KNOBS["grad_rs"],
                     shard_consensus=KNOBS["shard_consensus"],
                     dyn_topology=TopologyConfig(
-                        scheduler=KNOBS["topo_scheduler"])))
+                        scheduler=KNOBS["topo_scheduler"]),
+                    obs=(_knob_obs_config())))
             state = trainer.abstract_state()
             state_sh = trainer.state_shardings()
             j = trainer.num_nodes
@@ -458,7 +495,9 @@ def lower_cell(cfg: ArchConfig, cell: ShapeCell, *, multi_pod: bool,
         rec["consensus"]["fused_round_model"] = fused_round_roofline(
             model, mesh, compression=_knob_codec(),
             dyn_topology=_TC(scheduler=KNOBS["topo_scheduler"]),
-            shard_consensus=KNOBS["shard_consensus"])
+            shard_consensus=KNOBS["shard_consensus"],
+            obs_ring_cap=KNOBS["obs_ring_cap"],
+            obs_drain_every=KNOBS["obs_drain_every"])
     rec["lower_compile_s"] = round(time.time() - t0, 1)
     main = rec[key]
     mf = model_flops(model, cell)

@@ -27,6 +27,7 @@ from repro.core.penalty import PenaltyConfig, SCHEMES
 from repro.data import DataConfig, SyntheticTokens
 from repro.launch.mesh import make_debug_mesh, make_production_mesh
 from repro.models import build_model
+from repro.obs import ObsConfig, ObsWriter, host_span_factory
 from repro.optim import ConsensusConfig, ConsensusTrainer
 from repro.optim.adamw import AdamWConfig
 from repro.runtime import (ElasticController, RetryPolicy, StragglerMonitor,
@@ -91,6 +92,22 @@ def parse_args(argv=None):
     ap.add_argument("--ckpt-dir", default="")
     ap.add_argument("--ckpt-every", type=int, default=10)
     ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--obs-dir", default="",
+                    help="observability (repro.obs): drain the on-device "
+                         "metrics ring + topology event journal into this "
+                         "directory (metrics.jsonl / events.jsonl / "
+                         "rollup.json; async runs add the RoundClock "
+                         "Perfetto trace). Unset = obs fully off — the "
+                         "compiled step is byte-identical")
+    ap.add_argument("--obs-ring-cap", type=int, default=256,
+                    help="rows in the on-device metrics ring")
+    ap.add_argument("--obs-drain-every", type=int, default=8,
+                    help="host drain cadence in consensus rounds")
+    ap.add_argument("--profile-rounds", type=int, default=0,
+                    help="capture a jax profiler trace covering the first "
+                         "N consensus rounds into <obs-dir>/profile "
+                         "(view in Perfetto/TensorBoard; the obs trace "
+                         "spans label the round phases)")
     return ap.parse_args(argv)
 
 
@@ -115,6 +132,9 @@ def main(argv=None):
         # the stale scheduler mirrors the executor's in-round gating into
         # the topology mask (monitoring + wire accounting see it)
         topo_sched = "stale"
+    obs_cfg = ObsConfig(ring_capacity=args.obs_ring_cap,
+                        drain_every=args.obs_drain_every) \
+        if args.obs_dir else None
     trainer = ConsensusTrainer(
         model, mesh,
         adamw=AdamWConfig(lr=args.lr),
@@ -127,7 +147,8 @@ def main(argv=None):
             dyn_topology=TopologyConfig(scheduler=topo_sched, churn=churn,
                                         max_staleness=args.max_staleness),
             async_exec=(AsyncConfig(max_staleness=args.max_staleness)
-                        if args.async_mode else None)))
+                        if args.async_mode else None),
+            obs=obs_cfg))
     state = trainer.init_state(jax.random.PRNGKey(args.seed))
     start_step = 0
     if args.ckpt_dir and latest_steps(args.ckpt_dir):
@@ -158,6 +179,22 @@ def main(argv=None):
     elastic = ElasticController(trainer.graph, topology=trainer.topo_rt)
     step_fn = with_retries(lambda s, b: train(s, b), RetryPolicy())
 
+    writer = None
+    if args.obs_dir:
+        writer = ObsWriter(args.obs_dir, meta={
+            "arch": cfg.arch_id, "scheme": args.scheme,
+            "topology": args.topology, "num_nodes": trainer.num_nodes,
+            "wire_codec": trainer.codec_name,
+            "wire_bytes_per_round":
+                trainer.codec.wire_bytes() * max(len(trainer.offsets), 1),
+            "offsets": [int(o) for o in trainer.offsets],
+            "async": bool(args.async_mode),
+            "ring_capacity": args.obs_ring_cap,
+            "drain_every": args.obs_drain_every,
+        }, max_staleness=(args.max_staleness if args.async_mode else None))
+    round_span = host_span_factory(writer is not None)
+    rounds, profiling = 0, False
+
     def make_batch(step):
         if cfg.frontend != "none":
             return data.embeds_batch(step, cfg.d_model)
@@ -174,10 +211,29 @@ def main(argv=None):
         line = f"step {step:5d} loss {float(m['loss']):.4f} {dt*1e3:.0f}ms"
         if trainer.should_sync(step):
             probe = make_batch(10**6 + step)
-            if executor is not None:
-                state, cm = executor.consensus_round(state, probe)
-            else:
-                state, cm = cons(state, probe)
+            if args.profile_rounds > 0 and rounds == 0 and not profiling:
+                try:
+                    jax.profiler.start_trace(
+                        os.path.join(args.obs_dir or ".", "profile"))
+                    profiling = True
+                except Exception as e:  # profiler backend unavailable
+                    print(f"profiler unavailable: {e}", flush=True)
+            with round_span("round/async" if executor is not None
+                            else "round/sync"):
+                if executor is not None:
+                    state, cm = executor.consensus_round(state, probe)
+                else:
+                    state, cm = cons(state, probe)
+            rounds += 1
+            if profiling and rounds >= args.profile_rounds:
+                jax.block_until_ready(cm["r_max"])
+                jax.profiler.stop_trace()
+                profiling = False
+                print(f"profile trace ({args.profile_rounds} rounds) -> "
+                      f"{os.path.join(args.obs_dir or '.', 'profile')}",
+                      flush=True)
+            if writer is not None and rounds % args.obs_drain_every == 0:
+                writer.drain(state, step=step + 1)
             line += (f" | consensus r={float(cm['r_max']):.4f} "
                      f"eta={float(cm['eta_mean']):.4f}")
             if trainer.dynamic:
@@ -224,6 +280,17 @@ def main(argv=None):
           f"{time.time() - t_start:.1f}s")
     if executor is not None:
         print(f"async executor: {executor.summary()}")
+    if writer is not None:
+        writer.drain(state, step=args.steps)          # tail < drain_every
+        if executor is not None:
+            executor.export_timeline(
+                os.path.join(args.obs_dir, "roundclock_trace.json"))
+        rollup = writer.finalize(
+            extra=({"async_summary": executor.summary()}
+                   if executor is not None else None))
+        print(f"obs: {rollup['rounds']} rounds, "
+              f"{rollup['journal_events']} topology events, "
+              f"{rollup['dropped_rows']} dropped rows -> {args.obs_dir}")
     return 0
 
 

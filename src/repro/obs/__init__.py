@@ -1,0 +1,43 @@
+"""Observability subsystem: metrics ring, trace spans, topology journal.
+
+Four pieces, one per telemetry concern (details in each module and in
+``docs/observability.md``):
+
+  * ``obs.schema``  — THE unified per-round metrics schema (key set +
+    stable ring-column registry) every round path emits against.
+  * ``obs.ring``    — on-device ``[cap, n_metrics]`` metrics ring riding
+    in ``TrainState``; appended in-jit, drained to host every K rounds.
+  * ``obs.trace``   — ``jax.named_scope`` / profiler-annotation span
+    factories with the round-phase naming convention.
+  * ``obs.journal`` — host-side JSONL event journal derived by diffing
+    drained ``TopologyState``/``PenaltyState`` snapshots.
+  * ``obs.export``  — the per-run artifact writer (``--obs-dir``):
+    metrics/events JSONL, summary rollup, RoundClock Perfetto trace, and
+    the artifact validator CLI.
+
+Everything is off by default and leaves zero trace in compiled code when
+off: ``ConsensusConfig.obs=None`` (or ``ObsConfig(enabled=False)``) lowers
+byte-identical HLO to a build without the subsystem (pinned in
+``tests/test_obs.py``).
+"""
+from repro.obs.export import (ObsWriter, build_rollup,
+                              roundclock_trace_events, validate_obs_dir,
+                              write_roundclock_trace)
+from repro.obs.journal import EventJournal, diff_events, snapshot
+from repro.obs.ring import (MetricsRing, ObsConfig, drain, drain_rows,
+                            init_ring, ring_append)
+from repro.obs.schema import (COLUMN_INDEX, NUM_COLUMNS, RING_COLUMNS,
+                              ROUND_METRICS, SCHEMA_VERSION, metrics_row,
+                              row_to_dict, unify_round_metrics)
+from repro.obs.trace import (host_span, host_span_factory, span,
+                             span_factory)
+
+__all__ = [
+    "COLUMN_INDEX", "EventJournal", "MetricsRing", "NUM_COLUMNS",
+    "ObsConfig", "ObsWriter", "RING_COLUMNS", "ROUND_METRICS",
+    "SCHEMA_VERSION", "build_rollup", "diff_events", "drain", "drain_rows",
+    "host_span", "host_span_factory", "init_ring", "metrics_row",
+    "ring_append", "roundclock_trace_events", "row_to_dict", "snapshot",
+    "span", "span_factory", "unify_round_metrics", "validate_obs_dir",
+    "write_roundclock_trace",
+]

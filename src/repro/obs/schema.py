@@ -1,0 +1,102 @@
+"""The unified consensus-metrics schema — ONE key set for every round path.
+
+Before this module existed each round flavor returned its own ad-hoc
+metrics dict: the sync engine emitted five keys, the bounded-staleness
+round added ``stale_edges``/``age_max``, and the ``max_staleness=0``
+degenerate path padded the missing ones with zeros at its call site
+(the shape drift the obs ISSUE's first satellite names). Every consumer —
+the launcher's log line, the metrics ring, the exporters, the regression
+benchmarks — now reads THIS registry instead:
+
+  * ``ROUND_METRICS`` is the ordered tuple of metric names every
+    consensus round emits (sync, async, replicated, sharded — identical
+    key sets, pinned by ``tests/test_obs.py``);
+  * ``RING_COLUMNS`` prepends the ``step`` stamp and is the column order
+    of the on-device ``MetricsRing`` buffer (``obs.ring``) — the mapping
+    metric name -> ring column is ``COLUMN_INDEX`` and is STABLE: new
+    metrics append, existing columns never renumber (drained artifacts
+    from different code versions stay comparable via
+    ``SCHEMA_VERSION``).
+
+Everything here is jit-friendly: ``unify_round_metrics`` runs inside the
+traced consensus step (zero-padding is two constants), ``metrics_row``
+stacks the dict into the ``[n_columns]`` f32 vector the ring stores.
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+# bump when RING_COLUMNS changes meaning (append-only growth does not
+# require it for readers that index by name via COLUMN_INDEX)
+SCHEMA_VERSION = 1
+
+# the unified per-round metric key set, in ring-column order. Zero is the
+# defined "not applicable" value for every async-only metric on the sync
+# path (no stale edges, zero max age) — the same values the async round
+# reports when nothing is actually stale, so the sync/async unification
+# is value-exact, not just key-exact.
+ROUND_METRICS = (
+    "r_max",         # max over alive nodes of the primal residual (eq. 5)
+    "s_max",         # max over alive nodes of the dual residual (eq. 5)
+    "f_mean",        # mean local objective over alive, connected nodes
+    "eta_mean",      # mean per-edge penalty over the static graph edges
+    "active_edges",  # |mask| / |adj| — the dynamic-topology gate fraction
+    "stale_edges",   # fraction of masked edges gated by staleness (async)
+    "age_max",       # max symmetrized staleness age on the mask (async)
+)
+
+# ring columns: the step stamp first, then the metrics in registry order
+RING_COLUMNS = ("step",) + ROUND_METRICS
+COLUMN_INDEX = {name: i for i, name in enumerate(RING_COLUMNS)}
+NUM_COLUMNS = len(RING_COLUMNS)
+
+# metrics that are integers in the round dicts (stored as f32 ring cells,
+# exported back as ints by the drain path)
+_INT_METRICS = frozenset({"age_max"})
+
+
+def unify_round_metrics(metrics: dict) -> dict:
+    """Pad a round's metrics dict to the full ``ROUND_METRICS`` key set.
+
+    Traced-code safe: missing keys become constant zeros (int32 for
+    ``_INT_METRICS``, f32 otherwise). Key order follows the registry, so
+    two unified dicts always zip cleanly. Extra keys are rejected — a new
+    metric must be registered in ``ROUND_METRICS`` (and thereby get a
+    stable ring column), not smuggled past the schema.
+    """
+    extra = set(metrics) - set(ROUND_METRICS)
+    if extra:
+        raise ValueError(
+            f"unregistered consensus metrics {sorted(extra)}; add them to "
+            f"obs.schema.ROUND_METRICS (append-only) first")
+    out = {}
+    for name in ROUND_METRICS:
+        if name in metrics:
+            out[name] = metrics[name]
+        elif name in _INT_METRICS:
+            out[name] = jnp.zeros((), jnp.int32)
+        else:
+            out[name] = jnp.zeros((), jnp.float32)
+    return out
+
+
+def metrics_row(step, metrics: dict):
+    """Stack a unified metrics dict into the ``[NUM_COLUMNS]`` f32 ring row.
+
+    ``step`` is the trainer's global step counter at the round (the stamp
+    the drain path keys artifacts by). Runs inside jit.
+    """
+    metrics = unify_round_metrics(metrics)
+    cells = [jnp.asarray(step, jnp.float32)]
+    cells += [jnp.asarray(metrics[name], jnp.float32)
+              for name in ROUND_METRICS]
+    return jnp.stack(cells)
+
+
+def row_to_dict(row) -> dict:
+    """One drained ring row (host array / list) -> a plain-python dict."""
+    out = {}
+    for name, i in COLUMN_INDEX.items():
+        v = float(row[i])
+        out[name] = int(v) if name in _INT_METRICS or name == "step" else v
+    return out

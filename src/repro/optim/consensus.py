@@ -45,6 +45,10 @@ from repro.core.penalty import (PenaltyConfig, PenaltyState, effective_eta,
 from repro.models.model import Model, arch_rules
 from repro.distributed import sharding as shd
 from repro.kernels import ref as kref
+from repro.obs import ring as obs_ring
+from repro.obs import schema as obs_schema
+from repro.obs import trace as obs_trace
+from repro.obs.ring import ObsConfig
 from repro.optim import adamw as adamw_lib
 from repro.optim import flatten
 from repro.topology import (TopologyConfig, TopologyRuntime, TopologyState,
@@ -80,6 +84,10 @@ class ConsensusConfig:
     # trainer strictly synchronous; max_staleness=0 enables the async step
     # functions but waits for every payload (bit-identical to sync)
     async_exec: AsyncConfig | None = None
+    # observability (repro.obs): the on-device metrics ring + trace spans.
+    # None (and ObsConfig(enabled=False)) leaves the compiled step
+    # byte-identical to a build without the subsystem
+    obs: ObsConfig | None = None
 
 
 class TrainState(NamedTuple):
@@ -91,6 +99,7 @@ class TrainState(NamedTuple):
     step: jax.Array
     topo: TopologyState    # [J, J] replicated — dynamic-topology runtime
     ledger: Any = None     # WireLedger [deg, J, W] — async executor only
+    ring: Any = None       # obs.MetricsRing [cap, n_metrics] — obs only
 
 
 def _leading(tree, spec_fn):
@@ -150,6 +159,13 @@ class ConsensusTrainer:
         self.codec = wire_lib.get_codec(self.codec_name, self.layout,
                                         self.slayout)
         self.dequant_spec = self.codec.kernel_dequant_spec()
+        # observability (repro.obs): the metrics ring rides in TrainState
+        # and trace spans wrap the round phases — both fully gated, so an
+        # obs-off trainer lowers byte-identical HLO (tests/test_obs.py)
+        self.obs_cfg = consensus.obs
+        self.obs_on = self.obs_cfg is not None and self.obs_cfg.enabled
+        self._span = obs_trace.span_factory(
+            self.obs_on and self.obs_cfg.with_spans)
 
     # ------------------------------------------------------------ state ----
     def _node_stack(self, tree):
@@ -178,7 +194,9 @@ class ConsensusTrainer:
             penalty=init_penalty_state(self.ccfg.penalty, self.num_nodes),
             step=jnp.zeros((), jnp.int32),
             topo=self.topo_rt.init_state(),
-            ledger=ledger)
+            ledger=ledger,
+            ring=(obs_ring.init_ring(self.obs_cfg.ring_capacity)
+                  if self.obs_on else None))
 
     def abstract_state(self) -> TrainState:
         """ShapeDtypeStruct mirror for the dry-run (no allocation)."""
@@ -207,10 +225,17 @@ class ConsensusTrainer:
                 lambda x: jax.ShapeDtypeStruct(x.shape, x.dtype),
                 init_wire_ledger(self.layout, len(self.offsets),
                                  self.num_nodes, codec=self.codec))
+        ring = None
+        if self.obs_on:
+            ring = obs_ring.MetricsRing(
+                buf=jax.ShapeDtypeStruct(
+                    (self.obs_cfg.ring_capacity, obs_schema.NUM_COLUMNS),
+                    jnp.float32),
+                head=jax.ShapeDtypeStruct((), jnp.int32))
         return TrainState(params=params, opt=opt, lam=flat0,
                           theta_bar_prev=flat0, penalty=pen,
                           step=jax.ShapeDtypeStruct((), jnp.int32),
-                          topo=topo, ledger=ledger)
+                          topo=topo, ledger=ledger, ring=ring)
 
     def state_shardings(self) -> TrainState:
         """NamedShardings for every state leaf (pod-leading params etc.)."""
@@ -261,11 +286,16 @@ class ConsensusTrainer:
             ledger_sh = WireLedger(
                 wires=NamedSharding(mesh, self._flat_pspec(3)), round=rep,
                 w_prev=rep)
+        # the metrics ring is tiny ([cap, n_metrics] f32) and read by the
+        # host drain: replicate it like the other telemetry state
+        ring_sh = obs_ring.MetricsRing(buf=rep, head=rep) \
+            if self.obs_on else None
         return TrainState(
             params=params_sh,
             opt=adamw_lib.AdamWState(step=rep, m=opt_m, v=opt_v),
             lam=flat_sh, theta_bar_prev=flat_sh,
-            penalty=pen, step=rep, topo=topo_sh, ledger=ledger_sh)
+            penalty=pen, step=rep, topo=topo_sh, ledger=ledger_sh,
+            ring=ring_sh)
 
     # ------------------------------------------------------- local steps ----
     def _local_loss(self, params, batch):
@@ -368,6 +398,22 @@ class ConsensusTrainer:
 
         return vloss
 
+    def _finish_round(self, new: TrainState, metrics: dict
+                      ) -> tuple[TrainState, dict]:
+        """Every consensus round's single exit: schema + metrics ring.
+
+        Unifies the metrics dict to the full ``obs.schema.ROUND_METRICS``
+        key set (sync, async, replicated and sharded rounds all emit
+        IDENTICAL keys — pinned by tests/test_obs.py) and, with obs
+        enabled, appends the round's row to the on-device metrics ring
+        (one ``dynamic_update_slice``; the host drains every K rounds).
+        """
+        metrics = obs_schema.unify_round_metrics(metrics)
+        if self.obs_on and new.ring is not None:
+            row = obs_schema.metrics_row(new.step, metrics)
+            new = new._replace(ring=obs_ring.ring_append(new.ring, row))
+        return new, metrics
+
     def _flat_pspec(self, ndim: int = 2) -> P:
         """THE spelling of the flat-buffer sharding, at any rank.
 
@@ -403,7 +449,8 @@ class ConsensusTrainer:
         (see ``docs/wire_formats.md``), pinned to the engine's flat
         sharding so each device encodes only its slab.
         """
-        wire = self.codec.encode(theta_flat)
+        with self._span("wire/encode"):
+            wire = self.codec.encode(theta_flat)
         if self.sharded:
             return self._constrain_flat(wire)
         return wire
@@ -415,7 +462,8 @@ class ConsensusTrainer:
         num_blocks for the fp8 per-block scales (which shard with the
         slabs — slab-local decode, no in-pod broadcast).
         """
-        payload, scales = self.codec.decode(wire)
+        with self._span("wire/decode"):
+            payload, scales = self.codec.decode(wire)
         if self.sharded:
             payload = self._constrain_flat(payload)
             if scales is not None and self.dequant_spec.per_block:
@@ -501,7 +549,8 @@ class ConsensusTrainer:
         fn = shd.shard_map_compat(
             local, self.mesh, in_specs=in_specs,
             out_specs=(flat_spec, flat_spec, flat_spec, pod, pod))
-        return fn(*args)
+        with self._span("consensus/fused_round"):
+            return fn(*args)
 
     def consensus_step(self, state: TrainState, probe_batch: Any
                        ) -> tuple[TrainState, dict]:
@@ -526,8 +575,9 @@ class ConsensusTrainer:
         fused kernel runs under a fully-manual region instead.
         """
         if self.num_nodes <= 1:
-            return state, {"r_max": jnp.zeros(()), "eta_mean": jnp.asarray(
-                self.ccfg.penalty.eta0)}
+            return self._finish_round(state, {
+                "r_max": jnp.zeros(()),
+                "eta_mean": jnp.asarray(self.ccfg.penalty.eta0)})
         j = self.num_nodes
         offsets = self.offsets
         deg = len(offsets)
@@ -540,13 +590,15 @@ class ConsensusTrainer:
         vloss = self._probe_vloss()
 
         # probe own objective (pre-update params, eq. 7 semantics)
-        f_self = vloss(state.params, probe_batch)              # [J]
+        with self._span("consensus/probe"):
+            f_self = vloss(state.params, probe_batch)          # [J]
 
         # pack in the params' native float dtype: the uncompressed wire then
         # moves the same bytes/param as the old per-leaf exchange (bf16 = 2B)
-        theta_flat = self._constrain_flat(
-            lay.pack(state.params, dtype=lay.wire_dtype))
-        wire = self._encode_wire(theta_flat)
+        with self._span("consensus/pack"):
+            theta_flat = self._constrain_flat(
+                lay.pack(state.params, dtype=lay.wire_dtype))
+            wire = self._encode_wire(theta_flat)
 
         eta = state.penalty.eta
         ones = jnp.ones((j, self.dequant_spec.scale_width), jnp.float32)
@@ -573,11 +625,13 @@ class ConsensusTrainer:
                 # scales). The barrier pins the exchange to the wire dtype —
                 # without it XLA hoists the consumers' f32 upcast above the
                 # permute and a bf16 wire would cross the DCN at 4 B/param.
-                rolled = jax.lax.optimization_barrier(
-                    jnp.roll(wire, -off, axis=0))
-                payload, scales = self._decode_wire(rolled)
-                f_off = vloss(self.codec.unpack(payload, scales),
-                              probe_batch)
+                with self._span(f"consensus/exchange/off{off}"):
+                    rolled = jax.lax.optimization_barrier(
+                        jnp.roll(wire, -off, axis=0))
+                    payload, scales = self._decode_wire(rolled)
+                with self._span("consensus/probe"):
+                    f_off = vloss(self.codec.unpack(payload, scales),
+                                  probe_batch)
                 return payload, (ones if scales is None else scales), f_off
 
             if dynamic:
@@ -660,11 +714,13 @@ class ConsensusTrainer:
             adj_pen = (adj & alive[:, None] & alive[None, :]) | topo.mask
         else:
             adj_pen = adj
-        penalty_new = update_penalty(
-            pcfg, state.penalty, adj=adj_pen, f_self=f_self, f_nbr=f_nbr,
-            r_norm=r_norm, s_norm=s_norm)
-        topo_new = self.topo_rt.update(topo, penalty=penalty_new,
-                                       r_norm=r_norm) if dynamic else topo
+        with self._span("consensus/penalty"):
+            penalty_new = update_penalty(
+                pcfg, state.penalty, adj=adj_pen, f_self=f_self,
+                f_nbr=f_nbr, r_norm=r_norm, s_norm=s_norm)
+            topo_new = self.topo_rt.update(
+                topo, penalty=penalty_new,
+                r_norm=r_norm) if dynamic else topo
         if kick_on:
             # edges the scheduler just gated: park their final consensus
             # force (the symmetrized weight applied THIS round) for the
@@ -693,7 +749,7 @@ class ConsensusTrainer:
             "active_edges": (active_edge_fraction(topo, adj) if dynamic
                              else jnp.ones(())),
         }
-        return new, metrics
+        return self._finish_round(new, metrics)
 
     # ------------------------------------------- async consensus round ----
     def consensus_step_async(self, state: TrainState, probe_batch: Any,
@@ -732,14 +788,14 @@ class ConsensusTrainer:
             raise ValueError("consensus_step_async needs ConsensusConfig."
                              "async_exec=AsyncConfig(...)")
         if self.num_nodes <= 1:
-            return state, {"r_max": jnp.zeros(()), "eta_mean": jnp.asarray(
-                self.ccfg.penalty.eta0)}
+            return self._finish_round(state, {
+                "r_max": jnp.zeros(()),
+                "eta_mean": jnp.asarray(self.ccfg.penalty.eta0)})
         acfg = self.async_cfg
         if acfg.max_staleness == 0:
-            new, metrics = self.consensus_step(state, probe_batch)
-            metrics = dict(metrics, stale_edges=jnp.zeros(()),
-                           age_max=jnp.zeros((), jnp.int32))
-            return new, metrics
+            # the sync round already emits the full unified key set (the
+            # schema registry replaced this path's ad-hoc zero padding)
+            return self.consensus_step(state, probe_batch)
 
         assert state.ledger is not None, "init_state builds the wire ledger"
         j = self.num_nodes
@@ -798,10 +854,12 @@ class ConsensusTrainer:
         newly_stale = prev_base & prev_live & ~live
         kick_m = jnp.where(newly_stale, ledger.w_prev, 0.0) + topo.kick
 
-        f_self = vloss(state.params, probe_batch)               # [J]
-        theta_flat = self._constrain_flat(
-            lay.pack(state.params, dtype=lay.wire_dtype))
-        wire = self._encode_wire(theta_flat)
+        with self._span("consensus/probe"):
+            f_self = vloss(state.params, probe_batch)           # [J]
+        with self._span("consensus/pack"):
+            theta_flat = self._constrain_flat(
+                lay.pack(state.params, dtype=lay.wire_dtype))
+            wire = self._encode_wire(theta_flat)
 
         ones = jnp.ones((j, self.dequant_spec.scale_width), jnp.float32)
         sym_sum = jnp.zeros((j,), jnp.float32)
@@ -818,8 +876,9 @@ class ConsensusTrainer:
                 # round k's permute issues regardless of who consumes it
                 # fresh — the overlap the executor's clock accounts for.
                 # The barrier pins the wire dtype (see consensus_step).
-                return jax.lax.optimization_barrier(
-                    jnp.roll(wire, -off, axis=0))
+                with self._span(f"consensus/exchange/off{off}"):
+                    return jax.lax.optimization_barrier(
+                        jnp.roll(wire, -off, axis=0))
 
             def _hold(held=held):
                 return held
@@ -833,8 +892,9 @@ class ConsensusTrainer:
             k_off = kick_m[idx, jidx]
 
             def _probe(payload=payload, scales_row=scales_row):
-                return vloss(self.codec.unpack(payload, scales_row),
-                             probe_batch)
+                with self._span("consensus/probe"):
+                    return vloss(self.codec.unpack(payload, scales_row),
+                                 probe_batch)
 
             # probe the payload actually consumed (stale ones included —
             # it IS our current estimate of the neighbor); a fully gated,
@@ -886,11 +946,13 @@ class ConsensusTrainer:
         # edges (the eq. 10 top-up revives them) but never on ghost rows
         alive = topo.node_alive
         adj_pen = (adj & alive[:, None] & alive[None, :]) | topo.mask
-        penalty_new = update_penalty(
-            pcfg, state.penalty, adj=adj_pen, f_self=f_self, f_nbr=f_nbr,
-            r_norm=r_norm, s_norm=s_norm)
-        topo_new = self.topo_rt.update(topo, penalty=penalty_new,
-                                       r_norm=r_norm) if dynamic else topo
+        with self._span("consensus/penalty"):
+            penalty_new = update_penalty(
+                pcfg, state.penalty, adj=adj_pen, f_self=f_self,
+                f_nbr=f_nbr, r_norm=r_norm, s_norm=s_norm)
+            topo_new = self.topo_rt.update(
+                topo, penalty=penalty_new,
+                r_norm=r_norm) if dynamic else topo
         if dynamic and self.topo_cfg.can_gate:
             # park kicks ONLY for edges that were ACTIVE this round (mask
             # AND within the staleness bound): an edge that aged out was
@@ -933,7 +995,7 @@ class ConsensusTrainer:
             / mask_edges,
             "age_max": jnp.where(base_mask, age_s, 0).max(),
         }
-        return new, metrics
+        return self._finish_round(new, metrics)
 
     def _freeze_rows(self, advance: jax.Array, new: TrainState,
                      old: TrainState, *, topo_new, ledger_new) -> TrainState:

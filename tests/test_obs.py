@@ -1,0 +1,432 @@
+"""Tests for the observability subsystem (repro.obs).
+
+Three layers:
+  * schema layer — the unified round-metrics registry is a STABILITY pin:
+    ring column order is append-only, extra keys are rejected, zero is the
+    defined not-applicable value for async-only metrics on the sync path;
+  * host layer — ring wraparound/drain semantics (pure read, cursor,
+    overflow accounting), topology event journal diffing on synthetic
+    snapshots, exporter artifact well-formedness, RoundClock -> Perfetto
+    reconstruction;
+  * engine pins (subprocess, 8 fake devices) —
+      - sync, async and sharded rounds emit the IDENTICAL metrics key set
+        (the metrics-shape-drift satellite pin),
+      - the ring appends under jit+donation with steps stamped, on the
+        sharded engine too,
+      - ``obs=None`` and ``ObsConfig(enabled=False)`` lower BYTE-IDENTICAL
+        HLO (zero compiled-step footprint when off — the acceptance pin),
+      - the ring exists in TrainState only when obs is enabled.
+"""
+import json
+import os
+import subprocess
+import sys
+from types import SimpleNamespace
+
+import numpy as np
+import pytest
+
+from repro.obs import (ObsConfig, diff_events, drain, drain_rows, init_ring,
+                       ring_append, snapshot)
+from repro.obs import schema
+
+ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+
+# -------------------------------------------------------- schema layer ----
+def test_schema_column_order_is_pinned():
+    """Ring columns are a wire format: existing columns NEVER renumber.
+
+    Appending a new metric is fine (add it to the end of ROUND_METRICS and
+    extend this pin); reordering or renaming breaks every drained artifact
+    on disk and requires a SCHEMA_VERSION bump instead.
+    """
+    assert schema.RING_COLUMNS == (
+        "step", "r_max", "s_max", "f_mean", "eta_mean", "active_edges",
+        "stale_edges", "age_max")
+    assert schema.NUM_COLUMNS == 8
+    assert schema.COLUMN_INDEX["step"] == 0
+    assert schema.COLUMN_INDEX["age_max"] == 7
+    assert schema.SCHEMA_VERSION == 1
+
+
+def test_unify_pads_missing_and_rejects_unregistered():
+    out = schema.unify_round_metrics({"r_max": 1.0, "s_max": 2.0})
+    assert tuple(out) == schema.ROUND_METRICS       # registry order
+    assert float(out["stale_edges"]) == 0.0
+    assert out["age_max"].dtype == np.int32         # typed zero
+    with pytest.raises(ValueError, match="unregistered"):
+        schema.unify_round_metrics({"r_max": 1.0, "my_new_metric": 3.0})
+
+
+def test_metrics_row_roundtrips_through_row_to_dict():
+    row = schema.metrics_row(7, {"r_max": 0.5, "age_max": 3})
+    assert row.shape == (schema.NUM_COLUMNS,)
+    d = schema.row_to_dict(np.asarray(row))
+    assert d["step"] == 7 and isinstance(d["step"], int)
+    assert d["age_max"] == 3 and isinstance(d["age_max"], int)
+    assert d["r_max"] == pytest.approx(0.5)
+    assert d["s_max"] == 0.0
+
+
+def test_obs_config_validation():
+    with pytest.raises(ValueError):
+        ObsConfig(ring_capacity=0)
+    with pytest.raises(ValueError):
+        ObsConfig(drain_every=0)
+    assert ObsConfig().enabled is True
+
+
+# ---------------------------------------------------------- ring layer ----
+def _rows(n, start=0):
+    return [schema.metrics_row(start + k, {"r_max": float(start + k)})
+            for k in range(n)]
+
+
+def test_ring_drain_is_chronological_and_pure():
+    ring = init_ring(8)
+    for row in _rows(3):
+        ring = ring_append(ring, row)
+    rows, cursor, dropped = drain(ring, 0)
+    assert dropped == 0 and cursor == 3
+    assert rows[:, schema.COLUMN_INDEX["step"]].tolist() == [0, 1, 2]
+    # pure read: same cursor -> same rows, device state untouched
+    rows2, _, _ = drain(ring, 0)
+    assert np.array_equal(rows, rows2)
+    assert int(ring.head) == 3
+    # cursor honored: nothing new since
+    rows3, cursor3, _ = drain(ring, cursor)
+    assert rows3.shape[0] == 0 and cursor3 == 3
+
+
+def test_ring_wraparound_reports_dropped_rows():
+    ring = init_ring(4)
+    for row in _rows(7):                 # 7 appends into cap 4
+        ring = ring_append(ring, row)
+    rows, cursor, dropped = drain(ring, 0)
+    assert dropped == 3                  # rows 0,1,2 overwritten
+    assert cursor == 7
+    # survivors are the newest cap rows, still chronological
+    assert rows[:, schema.COLUMN_INDEX["step"]].tolist() == [3, 4, 5, 6]
+
+
+def test_ring_append_wraps_under_jit():
+    import jax
+
+    @jax.jit
+    def appends(ring):
+        for row in _rows(5):
+            ring = ring_append(ring, row)
+        return ring
+
+    ring = appends(init_ring(4))
+    assert int(ring.head) == 5
+    rows, _, dropped = drain(ring, 0)
+    assert dropped == 1
+    assert rows[:, 0].tolist() == [1, 2, 3, 4]
+
+
+def test_drain_rows_dict_form():
+    ring = init_ring(4)
+    ring = ring_append(ring, schema.metrics_row(9, {"age_max": 2}))
+    rows, cursor, _ = drain_rows(ring, 0)
+    assert cursor == 1
+    assert rows[0]["step"] == 9 and rows[0]["age_max"] == 2
+    assert set(rows[0]) == set(schema.RING_COLUMNS)
+
+
+# ------------------------------------------------------- journal layer ----
+def _topo(j=4, **kw):
+    base = dict(mask=np.ones((j, j), bool), node_alive=np.ones(j, bool),
+                repair=np.zeros((j, j), bool), age=np.zeros((j, j), np.int32),
+                kick=np.zeros((j, j), np.float32))
+    base.update(kw)
+    return SimpleNamespace(**base)
+
+
+def _pen(j=4, **kw):
+    base = dict(eta=np.full((j, j), 0.1, np.float32),
+                cum_tau=np.zeros((j, j), np.float32),
+                budget=np.ones((j, j), np.float32),
+                n_incr=np.zeros((j, j), np.int32))
+    base.update(kw)
+    return SimpleNamespace(**base)
+
+
+def test_journal_diff_gate_revive_and_churn():
+    prev = snapshot(_topo(), _pen())
+    mask = np.ones((4, 4), bool)
+    mask[0, 1] = mask[1, 0] = False      # symmetric gate
+    mask[2, 3] = False                   # one-sided flip gates too: an edge
+                                         # is active iff BOTH directions are
+    alive = np.ones(4, bool)
+    alive[3] = False
+    repair = np.zeros((4, 4), bool)
+    repair[1, 2] = True
+    cur = snapshot(_topo(mask=mask, node_alive=alive, repair=repair), _pen())
+    ev = diff_events(prev, cur, step=5)
+    by = {}
+    for e in ev:
+        by.setdefault(e["event"], []).append(e)
+    assert [e["edge"] for e in by["edge_gated"]] == [[0, 1], [2, 3]]
+    assert by["edge_gated"][0]["step"] == 5
+    assert by["node_dropped"][0]["node"] == 3
+    assert by["repair_activated"][0]["edge"] == [1, 2]
+    assert "edge_revived" not in by
+    # revive is the reverse diff
+    ev_back = diff_events(cur, prev, step=6)
+    assert any(e["event"] == "edge_revived" and e["edge"] == [0, 1]
+               for e in ev_back)
+
+
+def test_journal_diff_staleness_and_kick():
+    prev = snapshot(_topo(), _pen())
+    age = np.zeros((4, 4), np.int32)
+    age[1, 2] = 3                        # symmetrized: max(age, age.T)
+    kick = np.zeros((4, 4), np.float32)
+    kick[0, 3] = kick[3, 0] = 0.5
+    cur = snapshot(_topo(age=age, kick=kick), _pen())
+    ev = diff_events(prev, cur, step=2, max_staleness=1)
+    kinds = {e["event"]: e for e in ev}
+    assert kinds["stale_gated"]["edge"] == [1, 2]
+    assert kinds["stale_gated"]["age"] == 3
+    assert kinds["kick_parked"]["edge"] == [0, 3]
+    assert kinds["kick_parked"]["weight"] == pytest.approx(0.5)
+    ev_back = diff_events(cur, prev, step=3, max_staleness=1)
+    kinds = {e["event"]: e for e in ev_back}
+    assert kinds["stale_revived"]["edge"] == [1, 2]
+    assert kinds["kick_absorbed"]["weight"] == pytest.approx(0.5)
+    # without the bound there are no staleness events (executor config)
+    assert not any("stale" in e["event"]
+                   for e in diff_events(prev, cur, step=2))
+
+
+def test_journal_diff_budget_lifecycle_is_directed():
+    prev = snapshot(_topo(), _pen())
+    tau = np.zeros((4, 4), np.float32)
+    tau[0, 1] = 2.0                      # exhausted one direction only
+    n_incr = np.zeros((4, 4), np.int32)
+    n_incr[2, 0] = 1
+    cur = snapshot(_topo(), _pen(cum_tau=tau, n_incr=n_incr,
+                                 budget=np.full((4, 4), 1.5, np.float32)))
+    ev = diff_events(prev, cur, step=9)
+    kinds = {e["event"]: e for e in ev}
+    assert kinds["budget_exhausted"]["edge"] == [0, 1]
+    assert kinds["budget_exhausted"]["cum_tau"] == pytest.approx(2.0)
+    assert kinds["budget_topup"]["edge"] == [2, 0]
+    assert kinds["budget_topup"]["n_incr"] == 1
+    assert sum(e["event"] == "budget_exhausted" for e in ev) == 1
+
+
+def test_event_journal_baseline_and_jsonl(tmp_path):
+    from repro.obs import EventJournal
+    path = str(tmp_path / "events.jsonl")
+    with EventJournal(path, max_staleness=1) as j:
+        assert j.observe(_topo(), _pen(), step=0) == []   # baseline
+        mask = np.ones((4, 4), bool)
+        mask[0, 2] = mask[2, 0] = False
+        ev = j.observe(_topo(mask=mask), _pen(), step=4)
+        assert len(ev) == 1
+        assert j.observe(_topo(mask=mask), _pen(), step=8) == []  # no diff
+    lines = [json.loads(ln) for ln in open(path)]
+    assert lines == [{"step": 4, "event": "edge_gated",
+                      "edge": [0, 2], "eta": pytest.approx(0.1)}]
+
+
+# -------------------------------------------------------- export layer ----
+def test_obs_writer_artifact_set(tmp_path):
+    from repro.obs import ObsWriter, validate_obs_dir
+    d = str(tmp_path / "run")
+    w = ObsWriter(d, meta={"wire_codec": "native",
+                           "wire_bytes_per_round": 123, "offsets": [1]})
+    w.append_metrics([schema.row_to_dict(np.asarray(r)) for r in _rows(3)])
+    w.journal.observe(_topo(), _pen(), step=0)
+    rollup = w.finalize(extra={"note": "test"})
+    assert rollup["rounds"] == 3
+    assert rollup["convergence"]["r_max"] == [0.0, 1.0, 2.0]
+    assert rollup["wire"]["wire_bytes_per_round"] == 123
+    assert rollup["note"] == "test"
+    report = validate_obs_dir(d)
+    assert report["ok"], report["errors"]
+    assert report["files"]["metrics.jsonl"]["rows"] == 3
+    # clock trace is optional, its absence is reported but not failed
+    assert report["files"]["roundclock_trace.json"]["present"] is False
+
+
+def test_validator_fails_on_missing_and_malformed(tmp_path):
+    from repro.obs import validate_obs_dir
+    d = str(tmp_path / "broken")
+    os.makedirs(d)
+    report = validate_obs_dir(d)
+    assert not report["ok"]
+    assert any("metrics.jsonl: missing" in e for e in report["errors"])
+    # a metrics row missing schema keys is an error too
+    for name in ("run.json", "rollup.json"):
+        with open(os.path.join(d, name), "w") as f:
+            json.dump({"rounds": 0, "convergence": {}, "staleness": {}}, f)
+    with open(os.path.join(d, "events.jsonl"), "w"):
+        pass
+    with open(os.path.join(d, "metrics.jsonl"), "w") as f:
+        f.write(json.dumps({"step": 1}) + "\n")
+    report = validate_obs_dir(d)
+    assert any("missing keys" in e for e in report["errors"])
+
+
+def test_roundclock_perfetto_reconstruction(tmp_path):
+    from repro.async_exec import RoundClock, straggler_compute
+    from repro.obs import roundclock_trace_events, write_roundclock_trace
+    clock = RoundClock(compute_s=straggler_compute(3, factor=2.0),
+                       wire_s=0.25, offsets=(1,))
+    for _ in range(4):
+        clock.tick()
+    ev = roundclock_trace_events(clock)
+    spans = [e for e in ev if e["ph"] == "X" and e["cat"] == "compute"]
+    wires = [e for e in ev if e["ph"] == "X" and e["cat"] == "wire"]
+    ticks = [e for e in ev if e["ph"] == "i"]
+    assert len(spans) == int(np.sum(clock.rounds_done))
+    assert len(wires) == len(spans)      # every round sends once
+    assert len(ticks) == 4
+    # straggler node 0 rounds are 2x wide; sends start at round end
+    w0 = [e for e in spans if e["tid"] == 0][0]
+    w1 = [e for e in spans if e["tid"] == 1][0]
+    assert w0["dur"] == pytest.approx(2 * w1["dur"])
+    s1 = [e for e in wires if e["tid"] == 3 + 1][0]
+    assert s1["ts"] == pytest.approx(w1["ts"] + w1["dur"])
+    path = write_roundclock_trace(clock, str(tmp_path / "t.json"))
+    doc = json.load(open(path))
+    assert doc["traceEvents"] and doc["otherData"]["tick_s"] == clock.tick_s
+
+
+# ----------------------------------------------- engine layer (8 dev) ----
+_ENGINE = r"""
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+import json
+import numpy as np
+import jax
+from repro.async_exec import AsyncConfig, AsyncExecutor
+from repro.configs import get_reduced_config
+from repro.core.penalty import PenaltyConfig
+from repro.data import DataConfig, SyntheticTokens
+from repro.launch.mesh import make_mesh
+from repro.models import build_model
+from repro.obs import ObsConfig
+from repro.obs import ring as ring_lib
+from repro.obs import schema
+from repro.optim import ConsensusConfig, ConsensusTrainer
+from repro.optim.adamw import AdamWConfig
+from repro.topology import TopologyConfig
+
+out = {}
+mesh = make_mesh((4, 2, 1), ("pod", "data", "model"))
+cfg = get_reduced_config("qwen3-4b")
+model = build_model(cfg)
+data = SyntheticTokens(DataConfig(vocab=cfg.vocab, seq_len=32,
+                                  batch_per_node=2, num_nodes=4))
+probe = data.batch(0, probe=True)
+
+def make(obs=None, async_cfg=None, sharded=False):
+    return ConsensusTrainer(
+        model, mesh, adamw=AdamWConfig(lr=1e-2),
+        consensus=ConsensusConfig(
+            penalty=PenaltyConfig(scheme="nap", eta0=0.1),
+            topology="ring", local_steps=1,
+            dyn_topology=TopologyConfig(),
+            async_exec=async_cfg, shard_consensus=sharded, obs=obs))
+
+# --- 1. obs off leaves ZERO footprint: byte-identical HLO ---------------
+hlo = {}
+for tag, obs in (("none", None), ("disabled", ObsConfig(enabled=False)),
+                 ("enabled", ObsConfig(ring_capacity=8))):
+    tr = make(obs=obs)
+    st = tr.init_state(jax.random.PRNGKey(0))
+    hlo[tag] = jax.jit(tr.consensus_step).lower(st, probe).as_text()
+    if tag != "enabled":
+        out[f"ring_is_none_{tag}"] = st.ring is None
+out["hlo_off_byte_identical"] = hlo["none"] == hlo["disabled"]
+out["hlo_enabled_differs"] = hlo["none"] != hlo["enabled"]
+out["hlo_enabled_has_ring_write"] = (
+    "dynamic_update_slice" in hlo["enabled"]        # stablehlo spelling
+    or "dynamic-update-slice" in hlo["enabled"])    # hlo spelling
+
+# --- 2. ring under the REAL jitted step fns (donation path) -------------
+results = {}
+for tag, kw in (("sync", {}), ("sharded", {"sharded": True})):
+    tr = make(obs=ObsConfig(ring_capacity=8), **kw)
+    st = tr.init_state(jax.random.PRNGKey(0))
+    train, cons = tr.jit_step_fns()
+    for s in range(3):      # launcher cadence: train step then round, so
+        st, m = train(st, data.batch(s))        # the stamped steps differ
+        st, m = cons(st, data.batch(s, probe=True))
+    rows, cursor, dropped = ring_lib.drain_rows(st.ring, 0)
+    results[tag] = (rows, m)
+    out[f"{tag}_ring_rows"] = len(rows)
+    out[f"{tag}_ring_dropped"] = dropped
+    out[f"{tag}_ring_steps"] = [r["step"] for r in rows]
+    out[f"{tag}_keys"] = sorted(m)
+
+# --- 3. async executor rounds append too, same key set ------------------
+tra = make(obs=ObsConfig(ring_capacity=8),
+           async_cfg=AsyncConfig(max_staleness=1))
+sta = tra.init_state(jax.random.PRNGKey(0))
+train_a = tra.jit_step_fns()[0]
+sta, _ = train_a(sta, data.batch(0))
+ex = AsyncExecutor(tra)
+for s in range(1, 4):
+    sta, ma = ex.consensus_round(sta, probe)
+rows_a, _, _ = ring_lib.drain_rows(sta.ring, 0)
+out["async_ring_rows"] = len(rows_a)
+out["async_keys"] = sorted(ma)
+out["schema_keys"] = sorted(schema.ROUND_METRICS)
+out["row_keys_match_schema"] = all(
+    set(r) == set(schema.RING_COLUMNS) for r in results["sync"][0] + rows_a)
+print("RESULT " + json.dumps(out))
+"""
+
+
+@pytest.fixture(scope="module")
+def engine_results():
+    env = dict(os.environ)
+    env["PYTHONPATH"] = os.path.join(ROOT, "src")
+    proc = subprocess.run([sys.executable, "-c", _ENGINE], env=env,
+                          capture_output=True, text=True, timeout=1800)
+    assert proc.returncode == 0, proc.stderr[-3000:]
+    line = [ln for ln in proc.stdout.splitlines()
+            if ln.startswith("RESULT ")][-1]
+    return json.loads(line[len("RESULT "):])
+
+
+def test_obs_off_is_byte_identical_hlo(engine_results):
+    """Acceptance pin: with obs unset (or enabled=False) the compiled
+    consensus step is BYTE-IDENTICAL to a build that never heard of obs —
+    no ring in the state, no spans in the HLO metadata, nothing."""
+    assert engine_results["hlo_off_byte_identical"] is True
+    assert engine_results["ring_is_none_none"] is True
+    assert engine_results["ring_is_none_disabled"] is True
+
+
+def test_obs_enabled_adds_exactly_the_ring_write(engine_results):
+    assert engine_results["hlo_enabled_differs"] is True
+    assert engine_results["hlo_enabled_has_ring_write"] is True
+
+
+def test_ring_appends_under_jit_and_donation(engine_results):
+    """The jitted (donating) step fns append one stamped row per round on
+    both the replicated and the sharded engine; the pure-read drain sees
+    them all."""
+    for tag in ("sync", "sharded"):
+        assert engine_results[f"{tag}_ring_rows"] == 3
+        assert engine_results[f"{tag}_ring_dropped"] == 0
+        steps = engine_results[f"{tag}_ring_steps"]
+        assert steps == sorted(steps) and len(set(steps)) == 3
+    assert engine_results["async_ring_rows"] == 3
+
+
+def test_metrics_key_set_is_unified(engine_results):
+    """The metrics-shape-drift satellite pin: sync, sharded and async
+    rounds all emit exactly the registered ROUND_METRICS key set."""
+    want = engine_results["schema_keys"]
+    assert engine_results["sync_keys"] == want
+    assert engine_results["sharded_keys"] == want
+    assert engine_results["async_keys"] == want
+    assert engine_results["row_keys_match_schema"] is True
