@@ -63,10 +63,13 @@ CHECKS = {
     "BENCH_obs.json": {
         "rows_key": "rounds",            # obs_off / obs_on -> round_ms
         "metrics": {"round_ms": ("ratio", 4.0)},
-        # THE obs acceptance gate: the metrics ring + spans may cost at
+        # THE obs acceptance gates: the metrics ring + spans may cost at
         # most 3 percentage points of round time over the committed
-        # baseline overhead (which the full run measures at ~0)
-        "scalars": {"obs_overhead_ratio": ("abs", 0.03)},
+        # baseline overhead (which the full run measures at ~0), and the
+        # per-node telemetry ring at most 3 points over the scalar-ring
+        # baseline
+        "scalars": {"obs_overhead_ratio": ("abs", 0.03),
+                    "node_ring_overhead_ratio": ("abs", 0.03)},
     },
     "BENCH_async.json": {
         "rows_key": "rows",

@@ -94,9 +94,17 @@ class AsyncExecutor:
 
     def summary(self) -> dict:
         c = self.clock
+        rounds = np.asarray(c.rounds_done, dtype=np.int64)
+        # per-node lag behind the fleet's front-runner, in consensus
+        # rounds — the straggler scorer (obs.health) reads the percentiles
+        lag = (rounds.max() - rounds) if rounds.size else rounds
         return {
             "ticks": int(c.ticks),
-            "rounds_done": np.asarray(c.rounds_done).tolist(),
+            "rounds_done": rounds.tolist(),
+            "round_lag": lag.tolist(),
+            "lag_p50": float(np.percentile(lag, 50)) if lag.size else 0.0,
+            "lag_p90": float(np.percentile(lag, 90)) if lag.size else 0.0,
+            "lag_p100": float(lag.max()) if lag.size else 0.0,
             "async_elapsed_s": round(self.async_elapsed_s, 6),
             "sync_round_s": round(c.sync_round_s, 6),
             "tick_s": round(c.tick_s, 6),

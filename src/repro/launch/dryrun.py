@@ -79,7 +79,8 @@ def collective_bytes(hlo_text: str) -> dict:
 def consensus_state_bytes(layout, *, deg: int, compression: str,
                           n_shards: int = 1,
                           with_ledger: bool = False,
-                          obs_ring_cap: int = 0) -> dict:
+                          obs_ring_cap: int = 0,
+                          obs_num_nodes: int = 0) -> dict:
     """Per-DEVICE bytes of the flat consensus state.
 
     Counts what one device materializes for its pod's node row: the f32
@@ -111,6 +112,11 @@ def consensus_state_bytes(layout, *, deg: int, compression: str,
         # replicated — a constant, layout-independent sliver of HBM
         from repro.obs import schema as obs_schema
         out["metrics_ring"] = 4 * obs_ring_cap * obs_schema.NUM_COLUMNS
+        if obs_num_nodes > 0:
+            # per-node telemetry ring: [cap, J, n_node_cols] f32 — scales
+            # with mesh width J but stays replicated like the scalar ring
+            out["node_metrics_ring"] = (4 * obs_ring_cap * obs_num_nodes
+                                        * obs_schema.NUM_NODE_COLUMNS)
     out["total"] = sum(out.values())
     return out
 
@@ -210,11 +216,18 @@ def fused_round_roofline(model: "Model", mesh, *, compression: str,
     if obs_ring_cap > 0:
         from repro.obs import schema as obs_schema
         c_cols = obs_schema.NUM_COLUMNS
+        n_cols = obs_schema.NUM_NODE_COLUMNS
         obs_acct = {"obs": {
             "ring_hbm_bytes": 4 * obs_ring_cap * c_cols,
             "ring_write_bytes_per_round": 4 * c_cols,
             "drain_bytes_per_round":
                 4 * obs_ring_cap * c_cols // max(obs_drain_every, 1),
+            # per-node telemetry ring ([cap, J, n_node_cols]): one [J,
+            # n_node_cols] slab written per round, whole buffer per drain
+            "node_ring_hbm_bytes": 4 * obs_ring_cap * j * n_cols,
+            "node_ring_write_bytes_per_round": 4 * j * n_cols,
+            "node_ring_drain_bytes_per_round":
+                4 * obs_ring_cap * j * n_cols // max(obs_drain_every, 1),
             "drain_every": obs_drain_every,
         }}
     return {
@@ -238,10 +251,12 @@ def fused_round_roofline(model: "Model", mesh, *, compression: str,
         "consensus_state": {
             "per_device": consensus_state_bytes(
                 lay, deg=deg, compression=compression, n_shards=n_shards,
-                with_ledger=with_ledger, obs_ring_cap=obs_ring_cap),
+                with_ledger=with_ledger, obs_ring_cap=obs_ring_cap,
+                obs_num_nodes=j),
             "per_device_unsharded": consensus_state_bytes(
                 lay, deg=deg, compression=compression, n_shards=1,
-                with_ledger=with_ledger, obs_ring_cap=obs_ring_cap),
+                with_ledger=with_ledger, obs_ring_cap=obs_ring_cap,
+                obs_num_nodes=j),
         },
         **obs_acct,
     }

@@ -103,12 +103,26 @@ def parse_args(argv=None):
                     help="rows in the on-device metrics ring")
     ap.add_argument("--obs-drain-every", type=int, default=8,
                     help="host drain cadence in consensus rounds")
+    ap.add_argument("--no-node-ring", action="store_true",
+                    help="compile out the per-node telemetry ring "
+                         "(obs.node_ring), keeping only the scalar ring")
+    ap.add_argument("--health", action="store_true",
+                    help="run the online health monitor (repro.obs.health) "
+                         "over drained per-node rows: health_* events in "
+                         "the journal, a per-node score table + advisory "
+                         "recommendations in the rollup and printed at "
+                         "exit. ADVISORY ONLY — nothing acts on it. "
+                         "Requires --obs-dir")
     ap.add_argument("--profile-rounds", type=int, default=0,
                     help="capture a jax profiler trace covering the first "
                          "N consensus rounds into <obs-dir>/profile "
                          "(view in Perfetto/TensorBoard; the obs trace "
                          "spans label the round phases)")
-    return ap.parse_args(argv)
+    args = ap.parse_args(argv)
+    if args.health and not args.obs_dir:
+        ap.error("--health requires --obs-dir (the monitor feeds off "
+                 "drained per-node telemetry)")
+    return args
 
 
 def main(argv=None):
@@ -133,7 +147,8 @@ def main(argv=None):
         # the topology mask (monitoring + wire accounting see it)
         topo_sched = "stale"
     obs_cfg = ObsConfig(ring_capacity=args.obs_ring_cap,
-                        drain_every=args.obs_drain_every) \
+                        drain_every=args.obs_drain_every,
+                        with_node_ring=not args.no_node_ring) \
         if args.obs_dir else None
     trainer = ConsensusTrainer(
         model, mesh,
@@ -191,7 +206,8 @@ def main(argv=None):
             "async": bool(args.async_mode),
             "ring_capacity": args.obs_ring_cap,
             "drain_every": args.obs_drain_every,
-        }, max_staleness=(args.max_staleness if args.async_mode else None))
+        }, max_staleness=(args.max_staleness if args.async_mode else None),
+            health=args.health)
     round_span = host_span_factory(writer is not None)
     rounds, profiling = 0, False
 
@@ -283,6 +299,7 @@ def main(argv=None):
     if writer is not None:
         writer.drain(state, step=args.steps)          # tail < drain_every
         if executor is not None:
+            writer.observe_executor(executor.summary())
             executor.export_timeline(
                 os.path.join(args.obs_dir, "roundclock_trace.json"))
         rollup = writer.finalize(
@@ -291,6 +308,20 @@ def main(argv=None):
         print(f"obs: {rollup['rounds']} rounds, "
               f"{rollup['journal_events']} topology events, "
               f"{rollup['dropped_rows']} dropped rows -> {args.obs_dir}")
+        if args.health and "health" in rollup:
+            h = rollup["health"]
+            print("health scores (1.0 = clean):")
+            for n in h["nodes"]:
+                active = [k for k in ("divergence", "eta_stall",
+                                      "eta_oscillation", "straggler",
+                                      "drift") if n.get(k)]
+                tag = f" [{', '.join(active)}]" if active else ""
+                print(f"  node {n['node']}: {n['score']:.2f}{tag}")
+            recs = h["recommendations"]
+            for note in recs["notes"]:
+                print(f"  advisory: {note}")
+            if not recs["notes"]:
+                print("  no advisories")
     return 0
 
 

@@ -6,10 +6,17 @@
                           J, mesh, wire accounting) — written at open
     metrics.jsonl         drained metrics-ring rows, one JSON object per
                           consensus round, keys = ``obs.schema.RING_COLUMNS``
-    events.jsonl          the topology event journal (``obs.journal``)
+    node_metrics.jsonl    drained node-ring rows (``obs.node_ring``), one
+                          JSON object per round: ``{"step", "<metric>":
+                          [J values]}``, keys = ``schema.NODE_COLUMNS``
+    events.jsonl          the topology event journal (``obs.journal``),
+                          plus ``health_*`` events when the writer runs
+                          the health monitor (``obs.health``)
     rollup.json           summary rollup written at finalize: convergence
                           curve, active-edge fraction over rounds, wire
-                          bytes/round by codec, staleness histogram
+                          bytes/round by codec, staleness histogram, host
+                          round timing (``round_ms``), per-node health
+                          table + advisory recommendations
     roundclock_trace.json Chrome/Perfetto trace of the ``RoundClock``
                           modeled timeline (async runs) — load in
                           https://ui.perfetto.dev to eyeball modeled
@@ -20,6 +27,8 @@ The launcher, the ``AsyncExecutor`` and the benchmark modules all emit
 through this one writer instead of bespoke result plumbing, so every run
 — training drill, benchmark cell, CI smoke — leaves the same artifact
 shapes (validated by ``python -m repro.obs.export --validate DIR``).
+``python -m repro.obs.dashboard DIR`` renders the whole set into one
+self-contained HTML file.
 """
 from __future__ import annotations
 
@@ -27,18 +36,22 @@ import argparse
 import json
 import os
 import sys
+import time
 
 import numpy as np
 
+from repro.obs import node_ring as node_ring_lib
 from repro.obs import ring as ring_lib
 from repro.obs import schema
 from repro.obs.journal import EventJournal
 
 METRICS_FILE = "metrics.jsonl"
+NODE_METRICS_FILE = "node_metrics.jsonl"
 EVENTS_FILE = "events.jsonl"
 ROLLUP_FILE = "rollup.json"
 META_FILE = "run.json"
 CLOCK_TRACE_FILE = "roundclock_trace.json"
+DASHBOARD_FILE = "dashboard.html"
 
 
 # ------------------------------------------------------------- writer ----
@@ -46,21 +59,39 @@ class ObsWriter:
     """One run's observability sink (see module docstring for the layout)."""
 
     def __init__(self, obs_dir: str, *, meta: dict | None = None,
-                 max_staleness: int | None = None):
+                 max_staleness: int | None = None,
+                 health: bool = False, health_cfg=None):
         self.dir = obs_dir
         os.makedirs(obs_dir, exist_ok=True)
         self.meta = {"schema_version": schema.SCHEMA_VERSION,
                      "ring_columns": list(schema.RING_COLUMNS),
+                     "node_columns": list(schema.NODE_COLUMNS),
                      **(meta or {})}
         with open(self._p(META_FILE), "w") as f:
             json.dump(self.meta, f, indent=1, sort_keys=True)
             f.write("\n")
         self._metrics_f = open(self._p(METRICS_FILE), "a")
+        # opened lazily on the first node row: a scalar-only run
+        # (with_node_ring=False) must not leave an empty node artifact
+        self._node_f = None
         self.journal = EventJournal(self._p(EVENTS_FILE),
                                     max_staleness=max_staleness)
         self._rows: list[dict] = []     # in-memory history for the rollup
+        self._node_rows: list[dict] = []
         self.dropped_rows = 0
+        self.dropped_node_rows = 0
         self._cursor = 0                # metrics-ring drain cursor
+        self._node_cursor = 0           # node-ring drain cursor
+        # host wall-clock between drains -> the rollup's round_ms (the
+        # sync path's ONLY timing source; async runs also have the clock)
+        self._drain_log: list[dict] = []
+        self._last_drain_t: float | None = None
+        self._max_staleness = max_staleness
+        # online health monitor: fed per drain, events into the journal
+        self._health_on = health or health_cfg is not None
+        self._health_cfg = health_cfg
+        self.health = None              # built lazily (needs J)
+        self._executor_summary: dict | None = None
 
     def _p(self, name: str) -> str:
         return os.path.join(self.dir, name)
@@ -73,11 +104,31 @@ class ObsWriter:
             self._metrics_f.flush()
             self._rows.extend(rows)
 
+    def append_node_metrics(self, rows: list[dict]):
+        if rows and self._node_f is None:
+            self._node_f = open(self._p(NODE_METRICS_FILE), "a")
+        for r in rows:
+            self._node_f.write(json.dumps(r) + "\n")
+        if rows:
+            self._node_f.flush()
+            self._node_rows.extend(rows)
+        if rows and self._health_on:
+            if self.health is None:
+                from repro.obs.health import HealthMonitor
+                self.health = HealthMonitor(
+                    len(rows[0]["r"]), self._health_cfg,
+                    journal=self.journal,
+                    max_staleness=self._max_staleness)
+            self.health.observe_rows(rows)
+
     def drain(self, state, *, step: int) -> int:
-        """One drain: pull the ring + journal the topology. Returns the
+        """One drain: pull both rings + journal the topology. Returns the
         number of new metrics rows. The ONE call every driver makes every
-        K rounds — ring rows to ``metrics.jsonl``, topology/penalty diffs
-        to ``events.jsonl``, overflow accounted for the rollup."""
+        K rounds — ring rows to ``metrics.jsonl``, node-ring slabs to
+        ``node_metrics.jsonl`` (and through the health monitor when on),
+        topology/penalty diffs to ``events.jsonl``, overflow and host
+        wall-clock accounted for the rollup."""
+        now = time.monotonic()
         n = 0
         if getattr(state, "ring", None) is not None:
             rows, self._cursor, dropped = ring_lib.drain_rows(
@@ -85,9 +136,29 @@ class ObsWriter:
             self.dropped_rows += dropped
             self.append_metrics(rows)
             n = len(rows)
+        if getattr(state, "node_ring", None) is not None:
+            nrows, self._node_cursor, ndropped = \
+                node_ring_lib.drain_node_rows(state.node_ring,
+                                              self._node_cursor)
+            self.dropped_node_rows += ndropped
+            self.append_node_metrics(nrows)
         self.journal.observe(state.topo, getattr(state, "penalty", None),
                              step=step)
+        # the first drain anchors the clock; each later one records the
+        # wall time the n rounds since the previous drain took
+        if self._last_drain_t is not None and n > 0:
+            self._drain_log.append({
+                "step": int(step), "rounds": n,
+                "wall_s": now - self._last_drain_t})
+        self._last_drain_t = now
         return n
+
+    def observe_executor(self, summary: dict):
+        """Feed an ``AsyncExecutor.summary()`` to the health monitor
+        (clock-lag straggler path); stored for the rollup either way."""
+        self._executor_summary = summary
+        if self.health is not None:
+            self.health.observe_executor(summary)
 
     def write_roundclock_trace(self, clock) -> str:
         path = self._p(CLOCK_TRACE_FILE)
@@ -99,7 +170,17 @@ class ObsWriter:
         """Write ``rollup.json`` from the accumulated history and close."""
         rollup = build_rollup(self._rows, meta=self.meta,
                               dropped_rows=self.dropped_rows,
-                              journal_events=self.journal.num_events)
+                              journal_events=self.journal.num_events,
+                              node_rows=self._node_rows,
+                              dropped_node_rows=self.dropped_node_rows,
+                              drain_log=self._drain_log)
+        if self.health is not None:
+            rollup["health"] = {
+                **self.health.table(),
+                "recommendations": self.health.recommendations(),
+            }
+        if self._executor_summary is not None:
+            rollup["executor"] = self._executor_summary
         if extra:
             rollup.update(extra)
         with open(self._p(ROLLUP_FILE), "w") as f:
@@ -112,13 +193,21 @@ class ObsWriter:
         if self._metrics_f is not None:
             self._metrics_f.close()
             self._metrics_f = None
+        if self._node_f is not None:
+            self._node_f.close()
+            self._node_f = None
         self.journal.close()
 
 
 def build_rollup(rows: list[dict], *, meta: dict | None = None,
-                 dropped_rows: int = 0, journal_events: int = 0) -> dict:
+                 dropped_rows: int = 0, journal_events: int = 0,
+                 node_rows: list[dict] | None = None,
+                 dropped_node_rows: int = 0,
+                 drain_log: list[dict] | None = None) -> dict:
     """Summary rollup from drained metrics rows (pure, benchmark-friendly)."""
     meta = meta or {}
+    node_rows = node_rows or []
+    drain_log = drain_log or []
 
     def curve(key):
         return [r[key] for r in rows]
@@ -128,6 +217,26 @@ def build_rollup(rows: list[dict], *, meta: dict | None = None,
     for a in ages:
         hist[str(a)] = hist.get(str(a), 0) + 1
     stale = [float(r.get("stale_edges", 0.0)) for r in rows]
+    # host round timing from the drain wall-clock deltas (the first drain
+    # only anchors the clock, so each entry is wall_s over `rounds` rounds)
+    round_ms = [1e3 * d["wall_s"] / max(d["rounds"], 1) for d in drain_log]
+    per_node: dict = {}
+    if node_rows:
+        j = len(node_rows[0]["r"])
+        per_node = {
+            "num_nodes": j,
+            "rounds": len(node_rows),
+            "dropped_rows": int(dropped_node_rows),
+            "r_last": [float(v) for v in node_rows[-1]["r"]],
+            "r_mean": [float(np.mean([nr["r"][i] for nr in node_rows]))
+                       for i in range(j)],
+            "age_mean": [float(np.mean([nr["age_max"][i]
+                                        for nr in node_rows]))
+                         for i in range(j)],
+            "wire_rx_bytes_total": [
+                float(np.sum([nr["wire_rx_bytes"][i] for nr in node_rows]))
+                for i in range(j)],
+        }
     return {
         "schema_version": schema.SCHEMA_VERSION,
         "rounds": len(rows),
@@ -142,6 +251,14 @@ def build_rollup(rows: list[dict], *, meta: dict | None = None,
             "age_max_hist": hist,
             "stale_edges_mean": (float(np.mean(stale)) if stale else 0.0),
         },
+        "timing": {
+            "drains": len(drain_log),
+            "round_ms": (float(np.mean(round_ms)) if round_ms else None),
+            "round_ms_p50": (float(np.percentile(round_ms, 50))
+                             if round_ms else None),
+            "round_ms_max": (float(np.max(round_ms)) if round_ms else None),
+        },
+        "per_node": per_node,
         "wire": {k: meta[k] for k in
                  ("wire_codec", "wire_bytes_per_round", "offsets")
                  if k in meta},
@@ -220,8 +337,10 @@ def validate_obs_dir(obs_dir: str) -> dict:
         report["errors"].append(msg)
 
     for name, required in ((META_FILE, True), (METRICS_FILE, True),
+                           (NODE_METRICS_FILE, False),
                            (EVENTS_FILE, True), (ROLLUP_FILE, True),
-                           (CLOCK_TRACE_FILE, False)):
+                           (CLOCK_TRACE_FILE, False),
+                           (DASHBOARD_FILE, False)):
         path = os.path.join(obs_dir, name)
         info = {"present": os.path.exists(path)}
         report["files"][name] = info
@@ -242,10 +361,21 @@ def validate_obs_dir(obs_dir: str) -> dict:
                                 err(f"{name}:{i}: missing keys "
                                     f"{sorted(missing)}")
                                 break
+                    if name == NODE_METRICS_FILE:
+                        want = set(schema.NODE_COLUMNS)
+                        for i, r in enumerate(rows):
+                            missing = want - set(r)
+                            if missing:
+                                err(f"{name}:{i}: missing keys "
+                                    f"{sorted(missing)}")
+                                break
+                elif name == DASHBOARD_FILE:
+                    pass  # HTML; checked by `-m repro.obs.dashboard --check`
                 else:
                     doc = json.load(f)
                     if name == ROLLUP_FILE:
-                        for k in ("rounds", "convergence", "staleness"):
+                        for k in ("rounds", "convergence", "staleness",
+                                  "timing"):
                             if k not in doc:
                                 err(f"{name}: missing key {k!r}")
                     if name == CLOCK_TRACE_FILE and "traceEvents" not in doc:

@@ -156,6 +156,19 @@ class EventJournal:
         self._prev = snap
         return events
 
+    def emit(self, event: dict) -> dict:
+        """Append one pre-built event record to the same JSONL stream.
+
+        The health monitor (``obs.health``) routes its ``health_*`` events
+        through here so topology transitions and health findings land in
+        ONE chronologically ordered journal. Flushed per emit, mirroring
+        ``observe``.
+        """
+        self._f.write(json.dumps(event) + "\n")
+        self._f.flush()
+        self.num_events += 1
+        return event
+
     def close(self):
         if self._f is not None:
             self._f.close()

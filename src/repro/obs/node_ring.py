@@ -1,0 +1,91 @@
+"""On-device PER-NODE telemetry ring: who is diverging, not just whether.
+
+The scalar ``obs.ring`` answers "is the fleet converging" with one
+``[NUM_COLUMNS]`` row per round (``r_max``, ``eta_mean``, ...). It cannot
+answer the questions the paper's adaptation machinery raises in
+production: WHICH node's residual is growing, WHICH node's penalties have
+stopped moving, which pod is the straggler the age distribution points
+at. This ring carries that level: a ``[cap, J, NUM_NODE_COLUMNS]`` f32
+buffer riding in ``TrainState`` next to the scalar ring, one ``[J,
+NUM_NODE_COLUMNS]`` slab appended per consensus round on all four round
+paths (sync/async x replicated/sharded) through
+``ConsensusTrainer._finish_round``.
+
+Everything per-node the round already computes rides along for free: the
+fused kernel's blockwise residual partials reduce to PER-NODE ``r_i`` /
+``s_i`` vectors before the scalar extremes are taken (with
+``shard_consensus`` the in-pod psum finishes them — the rows here are the
+post-psum, replicated values, so sharded == replicated holds by
+construction and is pinned by test). The column registry is
+``obs.schema.NODE_COLUMNS`` — append-only, step stamps carried exactly
+via the int32-bitcast cell.
+
+Buffer discipline is IDENTICAL to the scalar ring (same monotonic head,
+same pure-read host cursor, same explicit dropped-row accounting) so the
+two rings drain with one discipline; the slab is J x wider, which is why
+the ring is separately gated (``ObsConfig.with_node_ring``) and
+separately priced in ``BENCH_obs.json`` (node ring <= 3 points over the
+scalar-ring baseline).
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.obs import schema
+
+
+class NodeRing(NamedTuple):
+    """Traced fixed-capacity per-node buffer (rides in ``TrainState``)."""
+
+    buf: jax.Array    # [cap, J, NUM_NODE_COLUMNS] f32 — slot = k % cap
+    head: jax.Array   # [] int32 — MONOTONIC append count (next write id)
+
+
+def init_node_ring(capacity: int, num_nodes: int) -> NodeRing:
+    return NodeRing(
+        buf=jnp.zeros((int(capacity), int(num_nodes),
+                       schema.NUM_NODE_COLUMNS), jnp.float32),
+        head=jnp.zeros((), jnp.int32))
+
+
+def node_ring_append(ring: NodeRing, row: jax.Array) -> NodeRing:
+    """Append one ``[J, NUM_NODE_COLUMNS]`` slab in-jit (one
+    dynamic_update_slice, exactly like the scalar ring)."""
+    cap = ring.buf.shape[0]
+    slot = jax.lax.rem(ring.head, jnp.int32(cap))
+    buf = jax.lax.dynamic_update_slice(
+        ring.buf, row[None].astype(ring.buf.dtype),
+        (slot, jnp.int32(0), jnp.int32(0)))
+    return NodeRing(buf=buf, head=ring.head + 1)
+
+
+def drain(ring: NodeRing, cursor: int
+          ) -> tuple[np.ndarray, int, int]:
+    """Host-side pure read of every slab appended since ``cursor``.
+
+    Returns ``(rows, new_cursor, dropped)`` — ``rows`` is ``[n, J,
+    NUM_NODE_COLUMNS]`` in CHRONOLOGICAL order; semantics match
+    ``obs.ring.drain`` exactly (monotonic head, host cursor, explicit
+    overflow count, device state never written back).
+    """
+    head = int(ring.head)
+    cap = int(ring.buf.shape[0])
+    n_new = head - cursor
+    if n_new <= 0:
+        return np.zeros((0,) + ring.buf.shape[1:], np.float32), head, 0
+    dropped = max(0, n_new - cap)
+    take = n_new - dropped
+    buf = np.asarray(ring.buf)
+    idx = (np.arange(head - take, head)) % cap
+    return buf[idx], head, dropped
+
+
+def drain_node_rows(ring: NodeRing, cursor: int
+                    ) -> tuple[list[dict], int, int]:
+    """``drain`` + per-slab dict conversion (``schema.node_row_to_dict``)."""
+    rows, new_cursor, dropped = drain(ring, cursor)
+    return [schema.node_row_to_dict(r) for r in rows], new_cursor, dropped

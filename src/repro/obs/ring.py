@@ -51,12 +51,20 @@ class ObsConfig:
       with_spans: wrap the traced round phases (pack, permute, decode,
         probe, fused kernel) in ``jax.named_scope`` spans and the host
         round calls in profiler TraceAnnotations (``obs.trace``).
+      with_node_ring: carry the per-node telemetry ring
+        (``obs.node_ring``: ``[cap, J, NODE_COLUMNS]``) next to the
+        scalar ring — per-node residuals, objective, penalty row means,
+        staleness ages, liveness and wire bytes, the inputs the health
+        monitor (``obs.health``) and the dashboard's per-node heatmaps
+        read. Shares ``ring_capacity``/``drain_every``. False keeps the
+        scalar-ring-only PR 7 footprint.
     """
 
     enabled: bool = True
     ring_capacity: int = 256
     drain_every: int = 8
     with_spans: bool = True
+    with_node_ring: bool = True
 
     def __post_init__(self):
         if self.ring_capacity < 1:

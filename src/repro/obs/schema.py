@@ -16,7 +16,22 @@ benchmarks — now reads THIS registry instead:
     metric name -> ring column is ``COLUMN_INDEX`` and is STABLE: new
     metrics append, existing columns never renumber (drained artifacts
     from different code versions stay comparable via
-    ``SCHEMA_VERSION``).
+    ``SCHEMA_VERSION``);
+  * ``NODE_METRICS``/``NODE_COLUMNS`` is the same contract one level
+    finer: the PER-NODE telemetry row (``obs.node_ring`` stores one
+    ``[J, NUM_NODE_COLUMNS]`` slab per round) — per-node residuals,
+    local objective, penalty row mean, staleness age, liveness/advance
+    flags and received wire bytes, appended by the same four round
+    paths through ``ConsensusTrainer._finish_round``.
+
+The ``step`` stamp is stored EXACTLY: the int32 step id is bitcast into
+the f32 cell (``encode_step``) and bitcast back on the host
+(``decode_step``). Storing the step as a float value silently corrupted
+ids above 2^24 (f32 has a 24-bit significand — at LM scale a long run
+crosses 16.7M steps); the bitcast carries all 32 bits, at the price that
+the raw cell is only meaningful through ``decode_step`` (which
+``row_to_dict``/``node_row_to_dict`` apply). SCHEMA_VERSION 2 marks the
+cell-meaning change.
 
 Everything here is jit-friendly: ``unify_round_metrics`` runs inside the
 traced consensus step (zero-padding is two constants), ``metrics_row``
@@ -24,11 +39,14 @@ stacks the dict into the ``[n_columns]`` f32 vector the ring stores.
 """
 from __future__ import annotations
 
+import jax
 import jax.numpy as jnp
+import numpy as np
 
-# bump when RING_COLUMNS changes meaning (append-only growth does not
-# require it for readers that index by name via COLUMN_INDEX)
-SCHEMA_VERSION = 1
+# bump when RING_COLUMNS/NODE_COLUMNS change meaning (append-only growth
+# does not require it for readers that index by name via COLUMN_INDEX).
+# v2: step cells are int32-bitcast (exact above 2^24), NODE_COLUMNS added.
+SCHEMA_VERSION = 2
 
 # the unified per-round metric key set, in ring-column order. Zero is the
 # defined "not applicable" value for every async-only metric on the sync
@@ -50,9 +68,41 @@ RING_COLUMNS = ("step",) + ROUND_METRICS
 COLUMN_INDEX = {name: i for i, name in enumerate(RING_COLUMNS)}
 NUM_COLUMNS = len(RING_COLUMNS)
 
+# the per-NODE metric key set, in node-ring column order. Same registry
+# rules as ROUND_METRICS: append-only, zero is the defined
+# not-applicable value (sync rounds have no staleness age; a static
+# topology has every node alive and advancing).
+NODE_METRICS = (
+    "r",              # this node's primal residual ||theta_i - bar_i||
+    "s",              # this node's dual residual (eq. 5)
+    "f_local",        # f_i(theta_i) on the probe batch (eq. 7 diagonal)
+    "eta_row_mean",   # mean penalty over the node's graph row — "is the
+                      # paper's adaptation still moving for THIS node"
+    "age_max",        # max symmetrized staleness age over incident edges
+    "alive",          # liveness flag (0 = ghost row after churn)
+    "advance",        # did this node run a real round this fleet tick
+    "wire_rx_bytes",  # fresh wire bytes this node consumed this round
+)
+NODE_COLUMNS = ("step",) + NODE_METRICS
+NODE_COLUMN_INDEX = {name: i for i, name in enumerate(NODE_COLUMNS)}
+NUM_NODE_COLUMNS = len(NODE_COLUMNS)
+
 # metrics that are integers in the round dicts (stored as f32 ring cells,
 # exported back as ints by the drain path)
 _INT_METRICS = frozenset({"age_max"})
+_INT_NODE_METRICS = frozenset({"age_max"})
+
+
+# ------------------------------------------------------ step stamping ----
+def encode_step(step):
+    """int32 step id -> the exact f32 ring cell (bitcast; runs in jit)."""
+    return jax.lax.bitcast_convert_type(
+        jnp.asarray(step, jnp.int32), jnp.float32)
+
+
+def decode_step(cell) -> int:
+    """The exact step id back out of a drained f32 cell (host side)."""
+    return int(np.float32(cell).view(np.int32))
 
 
 def unify_round_metrics(metrics: dict) -> dict:
@@ -84,10 +134,11 @@ def metrics_row(step, metrics: dict):
     """Stack a unified metrics dict into the ``[NUM_COLUMNS]`` f32 ring row.
 
     ``step`` is the trainer's global step counter at the round (the stamp
-    the drain path keys artifacts by). Runs inside jit.
+    the drain path keys artifacts by) — carried EXACTLY via the int32
+    bitcast cell (see module docstring). Runs inside jit.
     """
     metrics = unify_round_metrics(metrics)
-    cells = [jnp.asarray(step, jnp.float32)]
+    cells = [encode_step(step)]
     cells += [jnp.asarray(metrics[name], jnp.float32)
               for name in ROUND_METRICS]
     return jnp.stack(cells)
@@ -97,6 +148,62 @@ def row_to_dict(row) -> dict:
     """One drained ring row (host array / list) -> a plain-python dict."""
     out = {}
     for name, i in COLUMN_INDEX.items():
-        v = float(row[i])
-        out[name] = int(v) if name in _INT_METRICS or name == "step" else v
+        if name == "step":
+            out[name] = decode_step(row[i])
+        else:
+            v = float(row[i])
+            out[name] = int(v) if name in _INT_METRICS else v
+    return out
+
+
+# --------------------------------------------------- per-node metrics ----
+def unify_node_metrics(metrics: dict, num_nodes: int) -> dict:
+    """Pad a round's per-node metrics dict to the full ``NODE_METRICS``
+    key set of ``[J]`` vectors.
+
+    Missing keys become constant vectors of the defined not-applicable
+    value: zeros, except the flags — an unreported ``alive``/``advance``
+    means every node is live and ran the round (the sync path). Extra
+    keys are rejected like ``unify_round_metrics``.
+    """
+    extra = set(metrics) - set(NODE_METRICS)
+    if extra:
+        raise ValueError(
+            f"unregistered per-node metrics {sorted(extra)}; add them to "
+            f"obs.schema.NODE_METRICS (append-only) first")
+    out = {}
+    for name in NODE_METRICS:
+        if name in metrics:
+            out[name] = jnp.broadcast_to(
+                jnp.asarray(metrics[name]), (num_nodes,))
+        elif name in ("alive", "advance"):
+            out[name] = jnp.ones((num_nodes,), jnp.float32)
+        elif name in _INT_NODE_METRICS:
+            out[name] = jnp.zeros((num_nodes,), jnp.int32)
+        else:
+            out[name] = jnp.zeros((num_nodes,), jnp.float32)
+    return out
+
+
+def node_row(step, metrics: dict, num_nodes: int):
+    """Stack per-node metrics into the ``[J, NUM_NODE_COLUMNS]`` f32 slab
+    the node ring stores (one slab per round; runs inside jit)."""
+    metrics = unify_node_metrics(metrics, num_nodes)
+    cells = [jnp.broadcast_to(encode_step(step), (num_nodes,))]
+    cells += [jnp.asarray(metrics[name], jnp.float32)
+              for name in NODE_METRICS]
+    return jnp.stack(cells, axis=1)
+
+
+def node_row_to_dict(row) -> dict:
+    """One drained ``[J, NUM_NODE_COLUMNS]`` slab -> a plain-python dict:
+    ``{"step": int, "<metric>": [J values]}`` (ints for int metrics)."""
+    row = np.asarray(row)
+    out = {"step": decode_step(row[0, NODE_COLUMN_INDEX["step"]])}
+    for name in NODE_METRICS:
+        col = row[:, NODE_COLUMN_INDEX[name]]
+        if name in _INT_NODE_METRICS:
+            out[name] = [int(v) for v in col]
+        else:
+            out[name] = [float(v) for v in col]
     return out

@@ -45,6 +45,7 @@ from repro.core.penalty import (PenaltyConfig, PenaltyState, effective_eta,
 from repro.models.model import Model, arch_rules
 from repro.distributed import sharding as shd
 from repro.kernels import ref as kref
+from repro.obs import node_ring as obs_node_ring
 from repro.obs import ring as obs_ring
 from repro.obs import schema as obs_schema
 from repro.obs import trace as obs_trace
@@ -100,6 +101,7 @@ class TrainState(NamedTuple):
     topo: TopologyState    # [J, J] replicated — dynamic-topology runtime
     ledger: Any = None     # WireLedger [deg, J, W] — async executor only
     ring: Any = None       # obs.MetricsRing [cap, n_metrics] — obs only
+    node_ring: Any = None  # obs.NodeRing [cap, J, n_node_cols] — obs only
 
 
 def _leading(tree, spec_fn):
@@ -164,6 +166,7 @@ class ConsensusTrainer:
         # obs-off trainer lowers byte-identical HLO (tests/test_obs.py)
         self.obs_cfg = consensus.obs
         self.obs_on = self.obs_cfg is not None and self.obs_cfg.enabled
+        self.node_ring_on = self.obs_on and self.obs_cfg.with_node_ring
         self._span = obs_trace.span_factory(
             self.obs_on and self.obs_cfg.with_spans)
 
@@ -196,7 +199,10 @@ class ConsensusTrainer:
             topo=self.topo_rt.init_state(),
             ledger=ledger,
             ring=(obs_ring.init_ring(self.obs_cfg.ring_capacity)
-                  if self.obs_on else None))
+                  if self.obs_on else None),
+            node_ring=(obs_node_ring.init_node_ring(
+                self.obs_cfg.ring_capacity, self.num_nodes)
+                if self.node_ring_on else None))
 
     def abstract_state(self) -> TrainState:
         """ShapeDtypeStruct mirror for the dry-run (no allocation)."""
@@ -232,10 +238,18 @@ class ConsensusTrainer:
                     (self.obs_cfg.ring_capacity, obs_schema.NUM_COLUMNS),
                     jnp.float32),
                 head=jax.ShapeDtypeStruct((), jnp.int32))
+        node_ring = None
+        if self.node_ring_on:
+            node_ring = obs_node_ring.NodeRing(
+                buf=jax.ShapeDtypeStruct(
+                    (self.obs_cfg.ring_capacity, self.num_nodes,
+                     obs_schema.NUM_NODE_COLUMNS), jnp.float32),
+                head=jax.ShapeDtypeStruct((), jnp.int32))
         return TrainState(params=params, opt=opt, lam=flat0,
                           theta_bar_prev=flat0, penalty=pen,
                           step=jax.ShapeDtypeStruct((), jnp.int32),
-                          topo=topo, ledger=ledger, ring=ring)
+                          topo=topo, ledger=ledger, ring=ring,
+                          node_ring=node_ring)
 
     def state_shardings(self) -> TrainState:
         """NamedShardings for every state leaf (pod-leading params etc.)."""
@@ -286,16 +300,20 @@ class ConsensusTrainer:
             ledger_sh = WireLedger(
                 wires=NamedSharding(mesh, self._flat_pspec(3)), round=rep,
                 w_prev=rep)
-        # the metrics ring is tiny ([cap, n_metrics] f32) and read by the
-        # host drain: replicate it like the other telemetry state
+        # the metrics rings are tiny ([cap, n_metrics] / [cap, J, n_cols]
+        # f32) and read by the host drain: replicate them like the other
+        # telemetry state (node-ring rows hold the POST-psum per-node
+        # residuals, identical on every device by construction)
         ring_sh = obs_ring.MetricsRing(buf=rep, head=rep) \
             if self.obs_on else None
+        node_ring_sh = obs_node_ring.NodeRing(buf=rep, head=rep) \
+            if self.node_ring_on else None
         return TrainState(
             params=params_sh,
             opt=adamw_lib.AdamWState(step=rep, m=opt_m, v=opt_v),
             lam=flat_sh, theta_bar_prev=flat_sh,
             penalty=pen, step=rep, topo=topo_sh, ledger=ledger_sh,
-            ring=ring_sh)
+            ring=ring_sh, node_ring=node_ring_sh)
 
     # ------------------------------------------------------- local steps ----
     def _local_loss(self, params, batch):
@@ -398,20 +416,31 @@ class ConsensusTrainer:
 
         return vloss
 
-    def _finish_round(self, new: TrainState, metrics: dict
+    def _finish_round(self, new: TrainState, metrics: dict,
+                      node_metrics: dict | None = None
                       ) -> tuple[TrainState, dict]:
-        """Every consensus round's single exit: schema + metrics ring.
+        """Every consensus round's single exit: schema + metrics rings.
 
         Unifies the metrics dict to the full ``obs.schema.ROUND_METRICS``
         key set (sync, async, replicated and sharded rounds all emit
         IDENTICAL keys — pinned by tests/test_obs.py) and, with obs
         enabled, appends the round's row to the on-device metrics ring
         (one ``dynamic_update_slice``; the host drains every K rounds).
+        ``node_metrics`` is the per-node dict of ``[J]`` vectors for the
+        node ring (``obs.schema.NODE_METRICS``; missing keys pad to the
+        defined not-applicable values) — appended the same way when
+        ``ObsConfig.with_node_ring`` is on.
         """
         metrics = obs_schema.unify_round_metrics(metrics)
         if self.obs_on and new.ring is not None:
             row = obs_schema.metrics_row(new.step, metrics)
             new = new._replace(ring=obs_ring.ring_append(new.ring, row))
+        if self.node_ring_on and new.node_ring is not None:
+            nrow = obs_schema.node_row(new.step, node_metrics or {},
+                                       self.num_nodes)
+            new = new._replace(
+                node_ring=obs_node_ring.node_ring_append(new.node_ring,
+                                                         nrow))
         return new, metrics
 
     def _flat_pspec(self, ndim: int = 2) -> P:
@@ -616,6 +645,9 @@ class ConsensusTrainer:
             act = jnp.zeros((j,), jnp.float32)
             w_rows = []
             payload_dtype = self.codec.payload_dtype
+        # per-node wire accounting for the node ring: offsets whose permute
+        # ran AND whose payload this node consumed (mask or pending kick)
+        rx = jnp.zeros((j,), jnp.float32) if self.node_ring_on else None
         for off in offsets:
             jidx = (idx + off) % j
 
@@ -652,8 +684,13 @@ class ConsensusTrainer:
                         else m_off.sum() + k_off.sum()
                     payload, scales_row, f_off = jax.lax.cond(
                         need > 0, _exchange, _dead)
+                    executed = (need > 0).astype(jnp.float32)
                 else:
                     payload, scales_row, f_off = _exchange()
+                    executed = jnp.ones((), jnp.float32)
+                if self.node_ring_on:
+                    consumed = m_off + k_off if kick_on else m_off
+                    rx = rx + executed * (consumed > 0).astype(jnp.float32)
                 if kick_on:
                     kick_rows.append(k_off)
                 # the traced gate flows into the edge weights: a masked
@@ -663,6 +700,8 @@ class ConsensusTrainer:
                 w_rows.append(m_off)
             else:
                 payload, scales_row, f_off = _exchange()
+                if self.node_ring_on:
+                    rx = rx + 1.0
                 e_sym = 0.5 * (eta[idx, jidx] + eta[jidx, idx])    # [J]
             # scatter-free write of F[i, (i+off)%j]: static circulant mask
             # (an .at[].set scatter costs extra collective-permutes on SPMD)
@@ -749,7 +788,18 @@ class ConsensusTrainer:
             "active_edges": (active_edge_fraction(topo, adj) if dynamic
                              else jnp.ones(())),
         }
-        return self._finish_round(new, metrics)
+        node_metrics = None
+        if self.node_ring_on:
+            node_metrics = {
+                "r": r_rep, "s": s_rep, "f_local": f_self,
+                "eta_row_mean":
+                    jnp.where(adj, penalty_new.eta, 0.0).sum(axis=1)
+                    / jnp.maximum(adj.sum(axis=1), 1),
+                "alive": (topo.node_alive.astype(jnp.float32) if dynamic
+                          else jnp.ones((j,), jnp.float32)),
+                "wire_rx_bytes": rx * float(self.codec.wire_bytes()),
+            }
+        return self._finish_round(new, metrics, node_metrics)
 
     # ------------------------------------------- async consensus round ----
     def consensus_step_async(self, state: TrainState, probe_batch: Any,
@@ -995,7 +1045,25 @@ class ConsensusTrainer:
             / mask_edges,
             "age_max": jnp.where(base_mask, age_s, 0).max(),
         }
-        return self._finish_round(new, metrics)
+        node_metrics = None
+        if self.node_ring_on:
+            # fresh wire bytes per node: offsets whose arrival bit was set
+            # for this node this tick (held ledger payloads are not re-paid)
+            rx = sum(arrivals[d].astype(jnp.float32)
+                     for d in range(len(offsets)))
+            node_metrics = {
+                "r": r_rep, "s": s_rep, "f_local": f_self,
+                "eta_row_mean":
+                    jnp.where(adj, penalty_new.eta, 0.0).sum(axis=1)
+                    / jnp.maximum(adj.sum(axis=1), 1),
+                "age_max": jnp.where(base_mask, age_s, 0).max(axis=1),
+                "alive": topo.node_alive.astype(jnp.float32),
+                "advance": (advance.astype(jnp.float32)
+                            if advance is not None
+                            else jnp.ones((j,), jnp.float32)),
+                "wire_rx_bytes": rx * float(self.codec.wire_bytes()),
+            }
+        return self._finish_round(new, metrics, node_metrics)
 
     def _freeze_rows(self, advance: jax.Array, new: TrainState,
                      old: TrainState, *, topo_new, ledger_new) -> TrainState:
