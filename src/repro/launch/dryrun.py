@@ -1,10 +1,17 @@
-import os
-os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
-# The two lines above MUST run before any other import (jax locks the device
-# count at first init). Everything below may now import jax.
+from repro.launch.mesh import backend_initialized, set_backend_flags
+if not backend_initialized():
+    set_backend_flags(async_collectives=True, host_device_count=512)
+# The lines above MUST run before anything touches a jax backend (jax
+# locks XLA_FLAGS — including the fake host device count — at first init).
+# mesh.py deliberately imports cleanly without initializing a backend, and
+# set_backend_flags appends to a user-set XLA_FLAGS instead of clobbering
+# it. The guard keeps library imports of this module (benchmarks, tests —
+# typically after jax is already up) from warning about locked-in flags.
+# Everything below may now use jax freely.
 
 import argparse
 import json
+import os
 import re
 import sys
 import time
@@ -90,9 +97,10 @@ def consensus_state_bytes(layout, *, deg: int, compression: str,
     the legacy ``"none"`` spelling — all row sizes are read from the
     codec. With ``n_shards > 1`` (``ConsensusConfig.shard_consensus``)
     each device holds only its in-pod slab, so everything shrinks by ~the
-    in-pod axis size — the int8 wire keeps one 4*num_leaves scale tail per
-    shard (the only term that does not divide); the fp8 per-block scales
-    split exactly with the slabs.
+    in-pod axis size — both codec tails split with the slabs: the fp8
+    per-block scales exactly, the int8 per-leaf scales shard-locally (each
+    shard carries only the scales of leaves its slab overlaps, padded to
+    the widest shard window).
     """
     from repro import wire
 
@@ -316,6 +324,7 @@ KNOBS = {
     "probe_frac": 1,         # probe-batch reduction for the consensus round
     "topo_scheduler": "static",  # dynamic-topology edge scheduler
     "shard_consensus": False,    # in-pod sharded flat consensus state
+    "pipeline_offsets": 1,       # round-pipeline depth (1 = sequential)
     "obs_ring_cap": 0,           # obs metrics-ring rows; 0 = obs off
     "obs_drain_every": 8,        # obs host-drain cadence (rounds)
 }
@@ -362,6 +371,7 @@ def _compile_step(cfg: ArchConfig, cell: ShapeCell, mesh, *,
                     wire_codec=KNOBS["wire_codec"],
                     grad_rs=KNOBS["grad_rs"],
                     shard_consensus=KNOBS["shard_consensus"],
+                    pipeline_offsets=KNOBS["pipeline_offsets"],
                     dyn_topology=TopologyConfig(
                         scheduler=KNOBS["topo_scheduler"]),
                     obs=(_knob_obs_config())))

@@ -25,7 +25,8 @@ from repro.checkpoint import latest_steps, restore, save_async, wait_pending
 from repro.configs import get_config, get_reduced_config
 from repro.core.penalty import PenaltyConfig, SCHEMES
 from repro.data import DataConfig, SyntheticTokens
-from repro.launch.mesh import make_debug_mesh, make_production_mesh
+from repro.launch.mesh import (make_debug_mesh, make_production_mesh,
+                               set_backend_flags)
 from repro.models import build_model
 from repro.obs import ObsConfig, ObsWriter, host_span_factory
 from repro.optim import ConsensusConfig, ConsensusTrainer
@@ -77,6 +78,17 @@ def parse_args(argv=None):
                          "mean, wire/ledger rows) over the in-pod mesh "
                          "axes: per-device consensus-state HBM shrinks by "
                          "the in-pod axis size (docs/consensus_engine.md)")
+    ap.add_argument("--pipeline-offsets", type=int, default=1,
+                    help="round pipeline depth: how many graph offsets may "
+                         "have their collective-permute in flight while "
+                         "earlier offsets decode/probe/fuse (1 = today's "
+                         "sequential loop, bit-identical at every depth; "
+                         "docs/consensus_engine.md \"Round pipeline\")")
+    ap.add_argument("--no-async-collectives", action="store_true",
+                    help="skip arming the XLA latency-hiding/async-stream "
+                         "flags (set_backend_flags) before jax init; the "
+                         "pipeline still reorders issue/consume but the "
+                         "scheduler won't hide the permutes")
     ap.add_argument("--local-steps", type=int, default=4)
     ap.add_argument("--eta0", type=float, default=0.1)
     ap.add_argument("--lr", type=float, default=1e-2)
@@ -127,6 +139,10 @@ def parse_args(argv=None):
 
 def main(argv=None):
     args = parse_args(argv)
+    if not args.no_async_collectives:
+        # must land before the first jax device touch (build_model / mesh
+        # construction below) — a warn-no-op afterwards
+        set_backend_flags(async_collectives=True)
     cfg = get_reduced_config(args.arch) if args.reduced \
         else get_config(args.arch)
     model = build_model(cfg)
@@ -159,6 +175,7 @@ def main(argv=None):
             compression=args.compression,
             wire_codec=args.wire_codec,
             shard_consensus=args.shard_consensus,
+            pipeline_offsets=args.pipeline_offsets,
             dyn_topology=TopologyConfig(scheduler=topo_sched, churn=churn,
                                         max_staleness=args.max_staleness),
             async_exec=(AsyncConfig(max_staleness=args.max_staleness)

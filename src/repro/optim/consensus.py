@@ -85,6 +85,15 @@ class ConsensusConfig:
     # trainer strictly synchronous; max_staleness=0 enables the async step
     # functions but waits for every payload (bit-identical to sync)
     async_exec: AsyncConfig | None = None
+    # latency-hiding round pipeline: how many graph offsets' collective-
+    # permutes may be in flight ahead of the decode/probe consume point.
+    # 1 (default) is the strictly sequential permute-then-consume loop;
+    # >= 2 issues permutes early behind optimization_barriers, landing
+    # them in the WireLedger double buffer, and consumes them in offset
+    # order — numerically bit-identical at every depth (pinned), the
+    # depth only widens the window the latency-hiding scheduler may
+    # overlap. Pair with launch.mesh.set_backend_flags().
+    pipeline_offsets: int = 1
     # observability (repro.obs): the on-device metrics ring + trace spans.
     # None (and ObsConfig(enabled=False)) leaves the compiled step
     # byte-identical to a build without the subsystem
@@ -133,6 +142,14 @@ class ConsensusTrainer:
         # async executor (repro.async_exec): staleness gating engages the
         # masked kernel path even under a static scheduler
         self.async_cfg = consensus.async_exec
+        # latency-hiding round pipeline (docs/consensus_engine.md "Round
+        # pipeline"): depth 1 keeps the exact sequential loop; >= 2 issues
+        # offset permutes early and lands them in the WireLedger, which
+        # the sync path then carries too (needs_ledger)
+        self.pipeline_depth = max(1, int(consensus.pipeline_offsets))
+        self.pipelined = self.pipeline_depth > 1 and self.num_nodes > 1
+        self.needs_ledger = self.num_nodes > 1 \
+            and (self.async_cfg is not None or self.pipelined)
         # rules for *inside* the pod-manual region: batch maps to data only
         rules = arch_rules(model.cfg, mesh)
         rules["batch"] = ("data",)
@@ -187,7 +204,7 @@ class ConsensusTrainer:
         # two distinct buffers (never aliased: the state may be donated)
         flat_shape = (self.num_nodes, self.layout.total)
         ledger = None
-        if self.async_cfg is not None and self.num_nodes > 1:
+        if self.needs_ledger:
             ledger = init_wire_ledger(self.layout, len(self.offsets),
                                       self.num_nodes, codec=self.codec)
         return TrainState(
@@ -226,7 +243,7 @@ class ConsensusTrainer:
             lambda x: jax.ShapeDtypeStruct(x.shape, x.dtype),
             self.topo_rt.init_state())
         ledger = None
-        if self.async_cfg is not None and self.num_nodes > 1:
+        if self.needs_ledger:
             ledger = jax.tree_util.tree_map(
                 lambda x: jax.ShapeDtypeStruct(x.shape, x.dtype),
                 init_wire_ledger(self.layout, len(self.offsets),
@@ -295,7 +312,7 @@ class ConsensusTrainer:
         topo_sh = jax.tree_util.tree_map(lambda _: rep,
                                          self.topo_rt.init_state())
         ledger_sh = None
-        if self.async_cfg is not None and self.num_nodes > 1:
+        if self.needs_ledger:
             # wire rows shard like the stacked payloads in the fused round
             ledger_sh = WireLedger(
                 wires=NamedSharding(mesh, self._flat_pspec(3)), round=rep,
@@ -499,6 +516,24 @@ class ConsensusTrainer:
                 scales = self._constrain_flat(scales)
         return payload, scales
 
+    def _probe_params(self, payload, scales):
+        """Decoded (payload, scales) -> the probe forward's param pytree.
+
+        Sharded mode first pins the payload (and per-block scales) to an
+        in-pod-REPLICATED sharding — ONE all-gather of the slab-resident
+        buffer per offset — so the per-leaf unpack slices below are
+        device-local. Without the pin, every leaf slice crossing a slab
+        boundary pays its own in-pod resharding collective (the PR 4
+        known cost, one per leaf per offset). Collective count pinned in
+        tests/test_consensus_fused.py.
+        """
+        if self.sharded:
+            rep = NamedSharding(self.mesh, P("pod", None))
+            payload = jax.lax.with_sharding_constraint(payload, rep)
+            if scales is not None and self.dequant_spec.per_block:
+                scales = jax.lax.with_sharding_constraint(scales, rep)
+        return self.codec.unpack(payload, scales)
+
     def _fused_round(self, theta_flat, lam_flat, bar_prev, wires, scales,
                      e_stack, alpha, sym_sum, eta_node,
                      bar_w=None, inv_deg=None, kick_w=None):
@@ -648,21 +683,76 @@ class ConsensusTrainer:
         # per-node wire accounting for the node ring: offsets whose permute
         # ran AND whose payload this node consumed (mask or pending kick)
         rx = jnp.zeros((j,), jnp.float32) if self.node_ring_on else None
-        for off in offsets:
+
+        # ---- pipelined issue phase (pipeline_offsets >= 2) ---------------
+        # Reuse the async executor's WireLedger as the sync path's double
+        # buffer: raw rolled wire rows are issued AHEAD of the consume
+        # loop (up to `depth` permutes in flight before any decode/probe
+        # work) and read back in offset order. Each issue past the first
+        # window ties to the consume token of the offset `depth` earlier
+        # through an optimization_barrier — a real data dependency that
+        # bounds the in-flight window — and the latency-hiding scheduler
+        # (launch.mesh.set_backend_flags) overlaps the permutes with the
+        # earlier offsets' decode/probe compute. Bit-identical to the
+        # sequential loop at every depth: only scheduling freedom grows.
+        pipelined = self.pipelined
+        skip_dead = dynamic and self.topo_cfg.skip_dead_offsets
+        if pipelined:
+            assert state.ledger is not None, \
+                "init_state builds the wire ledger for pipeline_offsets>=2"
+            depth = min(self.pipeline_depth, deg)
+            inflight: list = [None] * deg
+            needs: list = [None] * deg
+            if skip_dead:
+                for d0, off0 in enumerate(offsets):
+                    jidx0 = (idx + off0) % j
+                    m0 = mask_f[idx, jidx0]
+                    needs[d0] = m0.sum() if not kick_on \
+                        else m0.sum() + topo.kick[idx, jidx0].sum()
+
+            def _issue_row(d, token=None):
+                src = wire
+                if token is not None:
+                    src, _ = jax.lax.optimization_barrier((src, token))
+
+                def _roll(src=src, off_d=offsets[d]):
+                    # same barrier discipline as the sequential _exchange:
+                    # pins the wire dtype; the span brackets the real wire
+                    with self._span(f"consensus/exchange/off{off_d}"):
+                        return jax.lax.optimization_barrier(
+                            jnp.roll(src, -off_d, axis=0))
+
+                if needs[d] is None:
+                    return _roll()
+                # dead-offset skip with the permute issued a step early:
+                # hold last round's ledger row (never decoded — the dead
+                # branch below skips the consume entirely)
+                return jax.lax.cond(needs[d] > 0, _roll,
+                                    lambda: state.ledger.wires[d])
+
+            for d0 in range(depth):
+                inflight[d0] = _issue_row(d0)
+
+        for d, off in enumerate(offsets):
             jidx = (idx + off) % j
 
-            def _exchange(off=off):
-                # rolled[i] = wire_{(i+off) % j}: ONE collective-permute on
-                # pod moving the whole contiguous buffer (payload + in-band
-                # scales). The barrier pins the exchange to the wire dtype —
-                # without it XLA hoists the consumers' f32 upcast above the
-                # permute and a bf16 wire would cross the DCN at 4 B/param.
-                with self._span(f"consensus/exchange/off{off}"):
-                    rolled = jax.lax.optimization_barrier(
-                        jnp.roll(wire, -off, axis=0))
-                    payload, scales = self._decode_wire(rolled)
+            def _exchange(d=d, off=off):
+                if pipelined:
+                    # consume the pre-issued row from the double buffer
+                    payload, scales = self._decode_wire(inflight[d])
+                else:
+                    # rolled[i] = wire_{(i+off) % j}: ONE collective-
+                    # permute on pod moving the whole contiguous buffer
+                    # (payload + in-band scales). The barrier pins the
+                    # exchange to the wire dtype — without it XLA hoists
+                    # the consumers' f32 upcast above the permute and a
+                    # bf16 wire would cross the DCN at 4 B/param.
+                    with self._span(f"consensus/exchange/off{off}"):
+                        rolled = jax.lax.optimization_barrier(
+                            jnp.roll(wire, -off, axis=0))
+                        payload, scales = self._decode_wire(rolled)
                 with self._span("consensus/probe"):
-                    f_off = vloss(self.codec.unpack(payload, scales),
+                    f_off = vloss(self._probe_params(payload, scales),
                                   probe_batch)
                 return payload, (ones if scales is None else scales), f_off
 
@@ -680,8 +770,9 @@ class ConsensusTrainer:
                         return (jnp.zeros((j, lay.total), payload_dtype),
                                 ones, f_self)
 
-                    need = m_off.sum() if not kick_on \
-                        else m_off.sum() + k_off.sum()
+                    need = needs[d] if pipelined \
+                        else (m_off.sum() if not kick_on
+                              else m_off.sum() + k_off.sum())
                     payload, scales_row, f_off = jax.lax.cond(
                         need > 0, _exchange, _dead)
                     executed = (need > 0).astype(jnp.float32)
@@ -711,6 +802,10 @@ class ConsensusTrainer:
             payloads.append(payload)
             scale_rows.append(scales_row)
             e_rows.append(e_sym)
+            if pipelined and d + depth < deg:
+                # bounded window: the next issue waits (only) on this
+                # offset's consume token
+                inflight[d + depth] = _issue_row(d + depth, token=f_off)
 
         wires = self._constrain_flat(jnp.stack(payloads))  # [deg, J, total]
         scales = jnp.stack(scale_rows)              # [deg, J, L]
@@ -770,6 +865,19 @@ class ConsensusTrainer:
         new = state._replace(params=params_new, lam=lam_new,
                              theta_bar_prev=bar_new, penalty=penalty_new,
                              topo=topo_new)
+        if pipelined and self.async_cfg is not None:
+            # the issued raw rows ARE next round's double buffer; w_prev
+            # records the weights applied this round so an interleaved
+            # bounded-staleness step absorbs kicks correctly. The PURE-sync
+            # path skips this writeback: nothing consumes it — the async
+            # invariant makes the first read of every edge fresh (the
+            # zero-initialized ledger is never decoded), and the dead-offset
+            # hold only needs a shape-stable row — so skipping saves a
+            # wire-sized [deg, J, W] copy per round.
+            new = new._replace(ledger=WireLedger(
+                wires=self._constrain_flat(jnp.stack(inflight)),
+                round=state.ledger.round + 1,
+                w_prev=0.5 * (eta + eta.T) * (mask_f if dynamic else 1.0)))
         if dynamic:
             # ghost and zero-active-degree rows have bar = 0, so their
             # "residual" is the full parameter norm; an isolated node has
@@ -917,33 +1025,52 @@ class ConsensusTrainer:
         f_nbr = jnp.zeros((j, j), jnp.float32)
         payloads, scale_rows, e_rows = [], [], []
         w_rows, kick_rows, ledger_rows = [], [], []
-        for d, off in enumerate(offsets):
-            jidx = (idx + off) % j
-            arr = arrivals[d].astype(bool)                      # [J]
-            held = ledger.wires[d]                              # [J, W]
+        # pipelined (pipeline_offsets >= 2): issue the offset permutes —
+        # and their arrival merges against the held ledger rows — ahead of
+        # the decode/probe consume loop, exactly like the sync round's
+        # issue phase. Same bounded window via consume-token barriers;
+        # bit-identical values at every depth.
+        pipelined = self.pipelined
+        depth = min(self.pipeline_depth, len(offsets)) if pipelined else 1
+        landed: list = [None] * len(offsets)
 
-            def _issue(off=off):
+        def _merge_row(d, token=None):
+            off_d = offsets[d]
+            arr_d = arrivals[d].astype(bool)                    # [J]
+            held_d = ledger.wires[d]                            # [J, W]
+            src = wire
+            if token is not None:
+                src, _ = jax.lax.optimization_barrier((src, token))
+
+            def _issue(src=src, off_d=off_d):
                 # round k's permute issues regardless of who consumes it
                 # fresh — the overlap the executor's clock accounts for.
                 # The barrier pins the wire dtype (see consensus_step).
-                with self._span(f"consensus/exchange/off{off}"):
+                with self._span(f"consensus/exchange/off{off_d}"):
                     return jax.lax.optimization_barrier(
-                        jnp.roll(wire, -off, axis=0))
+                        jnp.roll(src, -off_d, axis=0))
 
-            def _hold(held=held):
-                return held
+            def _hold(held_d=held_d):
+                return held_d
 
             # nothing arrived on this offset => the in-flight payload is
             # still on the wire; skip the permute entirely this tick
-            rolled = jax.lax.cond(arr.any(), _issue, _hold)
-            merged = jnp.where(arr[:, None], rolled, held)
+            rolled = jax.lax.cond(arr_d.any(), _issue, _hold)
+            return jnp.where(arr_d[:, None], rolled, held_d)
+
+        for d0 in range(depth if pipelined else 0):
+            landed[d0] = _merge_row(d0)
+
+        for d, off in enumerate(offsets):
+            jidx = (idx + off) % j
+            merged = landed[d] if pipelined else _merge_row(d)
             payload, scales_row = self._decode_wire(merged)
             g_off = gate_f[idx, jidx]
             k_off = kick_m[idx, jidx]
 
             def _probe(payload=payload, scales_row=scales_row):
                 with self._span("consensus/probe"):
-                    return vloss(self.codec.unpack(payload, scales_row),
+                    return vloss(self._probe_params(payload, scales_row),
                                  probe_batch)
 
             # probe the payload actually consumed (stale ones included —
@@ -964,6 +1091,8 @@ class ConsensusTrainer:
             w_rows.append(g_off)
             kick_rows.append(k_off)
             ledger_rows.append(merged)
+            if pipelined and d + depth < len(offsets):
+                landed[d + depth] = _merge_row(d + depth, token=f_off)
 
         wires = self._constrain_flat(jnp.stack(payloads))  # [deg, J, total]
         scales = jnp.stack(scale_rows)              # [deg, J, L]

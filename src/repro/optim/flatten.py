@@ -267,17 +267,29 @@ class ShardedLayout:
     ``[.., num_leaves]`` scale rows index it directly).
 
     Sharded int8 wire format (``encode_int8`` / ``split_wire``): each
-    shard's message is ``[q(slab), bitcast(scales)]`` — the f32 per-leaf
-    scale row rides as an int8 tail on EVERY shard (4*L bytes, noise next
-    to the payload). That makes every per-device slab SELF-CONTAINED: the
-    bytes a device holds (or keeps in its wire-ledger row) are sufficient
-    to dequantize its slab — what a per-device decoder / RDMA mailbox
-    needs on real hardware. The whole per-node wire stays one contiguous
-    ``[J, n_shards * shard_wire_width]`` buffer moved by one
-    collective-permute per graph offset. (In the GSPMD simulation the
-    replicated ``[J, L]`` scale row the kernel and probes consume is
-    assembled from ONE shard's tail — a 4*L-byte in-pod broadcast per
+    shard's message is ``[q(slab), bitcast(local scales)]`` — the tail
+    carries ONLY the scales of the leaves overlapping that slab
+    (``tail_gather`` below; 4*tail_leaves bytes), so the per-node wire
+    pays the scale bytes ~once, not once per shard, matching the fp8
+    codec's split-with-the-slabs discipline. Every per-device slab stays
+    SELF-CONTAINED: the bytes a device holds (or keeps in its wire-ledger
+    row) are sufficient to dequantize its slab — what a per-device
+    decoder / RDMA mailbox needs on real hardware. The whole per-node
+    wire stays one contiguous ``[J, n_shards * shard_wire_width]`` buffer
+    moved by one collective-permute per graph offset. (In the GSPMD
+    simulation the replicated ``[J, L]`` scale row the kernel and probes
+    consume is reassembled from the per-shard tails via the static
+    ``leaf_shard``/``leaf_pos`` tables — a ~4*L-byte in-pod gather per
     offset, noise next to the slab payloads.)
+
+    Tail tables: per shard the local leaf window is the contiguous id
+    range ``[tail_leaf_lo[s], tail_leaf_lo[s] + span_s)`` of leaves whose
+    ``[offset, offset + padded)`` span touches the slab; zero-size leaves
+    anchor to the shard containing their offset so every leaf appears in
+    at least one tail and the full scale row reconstructs byte-exactly.
+    ``tail_leaves`` is the max span (uniform per-shard width — the wire
+    must reshape to ``[J, n_shards, w]``); shorter windows pad by
+    repeating their last leaf id.
     """
 
     def __init__(self, layout: FlatLayout, n_shards: int):
@@ -307,6 +319,49 @@ class ShardedLayout:
         self.block_leaf_shards = (
             np.stack([s.block_leaf for s in shards])
             if shards and bps else np.zeros((n_shards, bps), np.int32))
+        self._build_tail_tables()
+
+    def _build_tail_tables(self):
+        """Static tables for the shard-local int8 scale tail (docstring)."""
+        lay = self.layout
+        n_leaves = lay.num_leaves
+        total = self.n_shards * self.shard_total
+        los, spans = [], []
+        for s in range(self.n_shards):
+            start, end = s * self.shard_total, (s + 1) * self.shard_total
+            ids = [li for li, lf in enumerate(lay.leaves)
+                   if (lf.padded > 0 and lf.offset < end
+                       and lf.offset + lf.padded > start)
+                   or (lf.padded == 0 and start <= lf.offset
+                       and (lf.offset < end or end >= total))]
+            los.append(min(ids) if ids else 0)
+            spans.append(max(ids) - min(ids) + 1 if ids else 0)
+        self.tail_leaf_lo = np.asarray(los, np.int32)       # [n_shards]
+        self.tail_leaves = max(spans) if spans else 0       # uniform width
+        # [n_shards, tail_leaves]: global leaf id at tail slot k of shard s
+        # (windows shorter than the max pad by repeating their last leaf)
+        if n_leaves and self.tail_leaves:
+            self.tail_gather = np.stack([
+                np.minimum(lo + np.arange(self.tail_leaves),
+                           min(lo + span, n_leaves) - 1 if span else lo)
+                for lo, span in zip(los, spans)]).astype(np.int32)
+        else:
+            self.tail_gather = np.zeros((self.n_shards, self.tail_leaves),
+                                        np.int32)
+        # [num_leaves]: where decode reads each leaf's scale back from —
+        # the first shard whose window holds it (spanning leaves appear in
+        # several tails with identical bytes; any copy reconstructs)
+        leaf_shard = np.zeros(n_leaves, np.int32)
+        leaf_pos = np.zeros(n_leaves, np.int32)
+        for li in range(n_leaves):
+            for s, (lo, span) in enumerate(zip(los, spans)):
+                if span and lo <= li < lo + span:
+                    leaf_shard[li], leaf_pos[li] = s, li - lo
+                    break
+            else:
+                raise AssertionError(
+                    f"leaf {li} missing from every shard tail window")
+        self.leaf_shard, self.leaf_pos = leaf_shard, leaf_pos
 
     # ------------------------------------------------------- wire widths ----
     def wire_width(self, compression: str) -> int:
@@ -326,9 +381,11 @@ class ShardedLayout:
     def wire_bytes(self, compression: str) -> int:
         """Bytes per node moved by ONE graph-offset permute (all shards).
 
-        Compressed wires pay their scale bytes once PER SHARD
-        (self-contained slabs); the fp8 per-block scales split with the
-        slabs, so only the int8 per-leaf tail actually replicates.
+        Both compressed tails split with the slabs — fp8 per-block scales
+        exactly, int8 per-leaf scales shard-locally (each slab carries its
+        own leaf window; only boundary-spanning leaves and the uniform
+        ``tail_leaves`` padding duplicate) — so the sharded wire pays the
+        scale bytes ~once per node, not once per shard.
         """
         from repro import wire
         return wire.get_codec(compression, self.layout, self).wire_bytes()

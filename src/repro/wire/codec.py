@@ -33,10 +33,12 @@ through — trainer rounds, async ledger rows, dryrun roofline, benchmarks):
 
 Sharding: constructed with a ``ShardedLayout``, a codec emits the sharded
 message — per-shard slabs, each self-contained (its own scale bytes), so a
-device's ledger row decodes from local bytes only. The int8 tail replicates
-per shard (leaf scales span shards); the fp8 per-block scales SPLIT with
-the block grid, so the sharded fp8 message carries zero redundancy and the
-scale rows shard over the in-pod axes like the payload.
+device's ledger row decodes from local bytes only. Both quantized tails
+split with the slabs: fp8 per-block scales shard exactly on the block
+grid (zero redundancy), and the int8 per-leaf tail carries each slab's
+local leaf window (``ShardedLayout.tail_gather`` — leaves spanning a slab
+boundary repeat in the adjacent tails, everything else pays its 4 bytes
+once), so sharded and unsharded wires move the same payload bytes.
 
 All codecs are stateless views over a ``FlatLayout``; only buffer contents
 are traced.
@@ -174,14 +176,18 @@ class Int8Codec(WireCodec):
     Sharded: the quantized payload is IDENTICAL to the unsharded encode
     (max reductions are exact, so a cross-shard leaf quantizes the same
     bytes); only the scale tail's placement differs — bitcast and
-    REPLICATED per shard (4*num_leaves bytes each, noise next to the
-    payload), which makes every per-device slab self-contained: the bytes
-    a device holds (or keeps in its wire-ledger row) suffice to dequantize
-    its slab — what a per-device decoder / RDMA mailbox needs on real
-    hardware. Apart from the per-leaf absmax (an in-pod max-reduce of the
-    [J, L] scale row — leaves cross shard boundaries), every op is
-    elementwise/reshape on the slab grid, so under a ``P('pod', inner)``
-    sharding constraint each device quantizes and lays out only its slab.
+    SHARD-LOCAL: each slab's tail carries only the scales of the leaves
+    overlapping that slab (``ShardedLayout.tail_gather``), the same
+    split-with-the-slabs discipline as the fp8 per-block tails, so the
+    per-node wire pays the ~4*L scale bytes once, not once per shard.
+    Every per-device slab stays self-contained: the bytes a device holds
+    (or keeps in its wire-ledger row) suffice to dequantize its slab —
+    what a per-device decoder / RDMA mailbox needs on real hardware.
+    Apart from the per-leaf absmax (an in-pod max-reduce of the [J, L]
+    scale row — leaves cross shard boundaries), every op is
+    elementwise/reshape/static-gather on the slab grid, so under a
+    ``P('pod', inner)`` sharding constraint each device quantizes and
+    lays out only its slab.
     """
 
     name = "int8"
@@ -196,7 +202,7 @@ class Int8Codec(WireCodec):
 
     @property
     def shard_wire_width(self) -> int:
-        return self.slayout.shard_total + 4 * self.layout.num_leaves
+        return self.slayout.shard_total + 4 * self.slayout.tail_leaves
 
     def encode(self, buf):
         lay = self.layout
@@ -209,8 +215,10 @@ class Int8Codec(WireCodec):
             return jnp.concatenate([q, tail.reshape(j, -1)], axis=1)
         s = self.slayout
         qr = q.reshape(j, s.n_shards, s.shard_total)
-        tails = jnp.broadcast_to(tail.reshape(j, 1, -1),
-                                 (j, s.n_shards, 4 * lay.num_leaves))
+        # shard-local tails: slab s carries only ITS leaf window's scales
+        # (static gather — spanning leaves repeat in adjacent tails)
+        tails = tail[:, s.tail_gather, :].reshape(
+            j, s.n_shards, 4 * s.tail_leaves)
         wire = jnp.concatenate([qr, tails], axis=2)
         return wire.reshape(j, s.n_shards * self.shard_wire_width)
 
@@ -220,9 +228,10 @@ class Int8Codec(WireCodec):
         For an uncompressed (float) wire returns ``(wire, None)`` — the
         historical ``decode_split`` contract some callers rely on.
         Sharded: the payload peel is elementwise on the slab grid (each
-        device slices its own slab); ``scales`` is read from shard 0's
-        tail — the per-shard copies are identical, so under GSPMD this is
-        one 4*L-byte in-pod broadcast, noise next to the slab payloads.
+        device slices its own slab); the full ``[J, L]`` scale row is
+        reassembled from the shard-local tails via the static
+        ``leaf_shard``/``leaf_pos`` tables (byte-exact — a ~4*L-byte
+        in-pod gather, noise next to the slab payloads).
         """
         if wire.dtype != jnp.int8:
             return wire, None
@@ -236,7 +245,9 @@ class Int8Codec(WireCodec):
         w = self.shard_wire_width
         rows = wire.reshape(j, s.n_shards, w)
         payload = rows[:, :, :s.shard_total].reshape(j, lay.total)
-        tail = rows[:, 0, s.shard_total:].reshape(j, lay.num_leaves, 4)
+        tails = rows[:, :, s.shard_total:].reshape(
+            j, s.n_shards, s.tail_leaves, 4)
+        tail = tails[:, s.leaf_shard, s.leaf_pos]          # [J, L, 4]
         return payload, jax.lax.bitcast_convert_type(tail, jnp.float32)
 
     def kernel_dequant_spec(self):

@@ -157,6 +157,33 @@ for line in hlo_s.splitlines():
         n_wire_perm += 1
 out["sharded_wire_permutes"] = n_wire_perm
 out["sharded_n_shards"] = trs.n_shards
+# probe-path resharding contract: decoding once per offset and pinning
+# the probe params in-pod replicated (_probe_params) costs ONE
+# payload-sized all-gather per offset — the regression this guards
+# against re-sharded per LEAF inside the probe's unpack (~num_leaves
+# payload-scale collectives per offset). Filter by slab size so the
+# model's own (small, activation-scale) gathers don't count.
+ag_re = re.compile(r"(?<!%)\ball-gather(?:-start)?(?:\.\d+)?\(")
+shape_any_re = re.compile(r"\b[a-z0-9]+\[([0-9,]*)\]")
+payload_slab = trs.layout.total // trs.n_shards
+n_big_ag = 0
+for line in hlo_s.splitlines():
+    if "=" not in line:
+        continue
+    lhs = line.split("=", 1)[1]
+    m = ag_re.search(lhs)
+    if not m:
+        continue
+    elems = 0
+    for dims in shape_any_re.findall(lhs[:lhs.find("all-gather")]):
+        n = 1
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+        elems = max(elems, n)
+    if elems >= payload_slab:
+        n_big_ag += 1
+out["sharded_big_all_gathers"] = n_big_ag
 # per-device consensus-state HBM: each device holds 1/n_shards of its
 # pod's flat lam row (the ISSUE acceptance shrink, measured for real)
 sts2, _ = jax.jit(trs.consensus_step)(sts, probe)
@@ -220,6 +247,19 @@ def test_sharded_one_wire_permute_per_offset(fused_results):
     assert fused_results["sharded_pallas_calls"] == 1, fused_results
     assert fused_results["sharded_wire_permutes"] == \
         fused_results["num_offsets"], fused_results
+
+
+def test_sharded_probe_gathers_once_per_offset(fused_results):
+    """Satellite pin: the sharded probe path decodes/unpacks ONCE per
+    offset with the payload pinned in-pod replicated, so payload-sized
+    all-gathers stay O(offsets) — never O(num_leaves) per-leaf reshards
+    (the bug this PR fixed). Budget: the probe's payload gather plus at
+    most one flat-state gather per offset, +1 for round-level slack."""
+    budget = 2 * fused_results["num_offsets"] + 1
+    assert fused_results["sharded_big_all_gathers"] <= budget, fused_results
+    # guard against vacuity: the leaf count must dwarf the budget, or the
+    # per-leaf regression would pass the pin
+    assert fused_results["num_leaves"] > budget, fused_results
 
 
 def test_sharded_lam_is_slab_resident(fused_results):

@@ -7,10 +7,14 @@ leaves, block sizes 128..64k) drive four pinned properties:
   * ``shard(n)`` slab tables reassemble to the full layout table (same
     blocks, same leaf ownership, contiguous block-aligned slabs);
   * shard-local int8 encode/decode == full-buffer encode/decode — the
-    sharded wire's payload bytes are IDENTICAL to ``encode_int8``'s and
-    every shard decodes with only its own slab bytes;
-  * per-shard wire widths account exactly for the payload + per-shard
-    bitcast scale tails.
+    sharded wire's payload bytes are IDENTICAL to ``encode_int8``'s, each
+    shard's tail carries exactly its leaf window's scales (self-contained
+    slab dequant), and the full scale row reconstructs byte-exactly from
+    the tails;
+  * per-shard wire widths account exactly for the payload + shard-LOCAL
+    bitcast scale tails — the sharded wire never pays the full 4*L tail
+    per shard (the pre-fix replication bug), and at ``n_shards=1`` it is
+    byte-identical to the unsharded wire.
 """
 import numpy as np
 import jax
@@ -125,13 +129,14 @@ def test_shard_local_int8_encode_matches_full_buffer():
             np.testing.assert_array_equal(
                 rows[:, s.index, :slay.shard_total],
                 np.asarray(full_payload)[:, s.start:s.start + s.size])
-            # every shard's tail carries the exact full-buffer scales —
-            # decode needs no other shard's bytes
+            # shard-local tail: exactly the full-buffer scales of THIS
+            # slab's leaf window (tail_gather order) — the slab can
+            # dequantize itself without any other shard's bytes
             tail = jnp.asarray(rows[:, s.index, slay.shard_total:]
-                               .reshape(j, lay.num_leaves, 4))
+                               .reshape(j, slay.tail_leaves, 4))
             np.testing.assert_array_equal(
                 np.asarray(jax.lax.bitcast_convert_type(tail, jnp.float32)),
-                np.asarray(full_scales))
+                np.asarray(full_scales)[:, slay.tail_gather[s.index]])
 
         # split_wire reassembles the identical (payload, scales) pair
         payload, scales = slay.split_wire(sh_wire)
@@ -153,13 +158,23 @@ def test_sharded_wire_width_accounting():
         slay = lay.shard(n_shards)
         assert slay.wire_width("none") == slay.shard_total
         assert slay.wire_width("int8") == \
-            slay.shard_total + 4 * lay.num_leaves
-        # int8: full payload + one scale tail PER shard; float: same bytes
+            slay.shard_total + 4 * slay.tail_leaves
+        # int8: full payload + shard-LOCAL scale tails; float: same bytes
         # as the unsharded wire
         assert slay.wire_bytes("int8") == \
-            lay.total + 4 * lay.num_leaves * n_shards
+            lay.total + 4 * slay.tail_leaves * n_shards
         assert slay.wire_bytes("none") == \
             lay.total * jnp.dtype(lay.wire_dtype).itemsize
+        # regression pin on the replication bug: the uniform window never
+        # exceeds the full leaf count, so the sharded tail bytes are
+        # bounded by (and at n_shards=1 equal to) the old per-shard-full
+        # format's — and every leaf still appears in some window
+        assert slay.tail_leaves <= lay.num_leaves
+        if n_shards == 1:
+            assert slay.tail_leaves == lay.num_leaves
+            assert slay.wire_bytes("int8") == lay.total + 4 * lay.num_leaves
+        covered = set(np.asarray(slay.tail_gather).ravel().tolist())
+        assert covered == set(range(lay.num_leaves))
 
     sweep(prop, cases=20, seed=35)
 
@@ -261,18 +276,20 @@ def test_int8_codec_byte_identical_to_pre_refactor_tail_format():
         q, scales, legacy = _legacy_int8_wire(lay, buf)
         got = np.asarray(wire.get_codec("int8", lay).encode(buf))
         np.testing.assert_array_equal(got, legacy)
-        # sharded message: same payload slabs, the same tail per shard
+        # sharded message: same payload slabs, shard-LOCAL scale tails
+        # (each slab carries only its leaf window, little-endian bitcast)
         slay = lay.shard(n_shards)
         got_s = np.asarray(wire.get_codec("int8", lay, slay).encode(buf))
         w = slay.wire_width("int8")
         rows = got_s.reshape(j, slay.n_shards, w)
-        tail = scales.view(np.int8).reshape(j, -1)
+        tail = scales.view(np.int8).reshape(j, lay.num_leaves, 4)
         for s in slay.shards:
             np.testing.assert_array_equal(
                 rows[:, s.index, :slay.shard_total],
                 q[:, s.start:s.start + s.size])
-            np.testing.assert_array_equal(rows[:, s.index,
-                                               slay.shard_total:], tail)
+            np.testing.assert_array_equal(
+                rows[:, s.index, slay.shard_total:],
+                tail[:, slay.tail_gather[s.index]].reshape(j, -1))
 
     sweep(prop, cases=15, seed=37)
 
@@ -313,9 +330,10 @@ def test_sharded_codec_payload_bytes_match_unsharded():
 
 
 def test_codec_wire_width_accounting():
-    """Wire widths/bytes per codec: native = itemsize*total, int8 pays one
-    4*L tail per shard, fp8 = 1 B/param + 4 B/block with scales splitting
-    exactly across shards (zero sharding overhead)."""
+    """Wire widths/bytes per codec: native = itemsize*total, int8 = 1
+    B/param + shard-local 4 B/leaf-window tails, fp8 = 1 B/param +
+    4 B/block with scales splitting exactly across shards (zero sharding
+    overhead)."""
     def prop(rng, i):
         tree, j, bs, n_shards = _draw_case(rng)
         lay = _layout_for(tree, bs, n_shards)
@@ -327,7 +345,12 @@ def test_codec_wire_width_accounting():
         assert i8.wire_bytes() == lay.total + 4 * lay.num_leaves
         i8s = wire.get_codec("int8", lay, slay)
         assert i8s.wire_bytes() == \
-            lay.total + 4 * lay.num_leaves * n_shards
+            lay.total + 4 * slay.tail_leaves * n_shards
+        # the old bug replicated the full 4*L tail in every shard — the
+        # shard-local format never exceeds that and matches it at 1 shard
+        assert i8s.wire_bytes() <= lay.total + 4 * lay.num_leaves * n_shards
+        if n_shards == 1:
+            assert i8s.wire_bytes() == i8.wire_bytes()
         for name in ("fp8_e4m3", "fp8_e5m2"):
             f8 = wire.get_codec(name, lay)
             f8s = wire.get_codec(name, lay, slay)

@@ -1,0 +1,118 @@
+"""set_backend_flags() contract: append-don't-clobber, warn-no-op after init.
+
+The dry-run (and any launcher arming the latency-hiding pipeline flags)
+depends on two behaviors regression-tested here:
+
+  1. a user-set XLA_FLAGS env var is APPENDED to, never clobbered, and a
+     flag the user already spelled keeps the user's value;
+  2. once any jax backend exists the env var is parsed and locked, so the
+     call must warn and change nothing instead of silently writing flags
+     that can no longer take effect.
+
+Both pre-init cases run in subprocesses — the test process itself has a
+live backend, which is exactly what the post-init case exercises in-proc.
+"""
+import os
+import subprocess
+import sys
+import warnings
+
+import pytest
+
+SRC = os.path.join(os.path.dirname(__file__), os.pardir, "src")
+
+
+def _run(code: str) -> str:
+    env = dict(os.environ, PYTHONPATH=SRC)
+    env.pop("XLA_FLAGS", None)
+    out = subprocess.run([sys.executable, "-c", code], env=env,
+                         capture_output=True, text=True, timeout=120)
+    assert out.returncode == 0, out.stderr
+    return out.stdout
+
+
+def test_appends_to_user_xla_flags():
+    # user flags survive verbatim and come FIRST; ours are appended
+    out = _run("""
+import os
+os.environ["XLA_FLAGS"] = "--xla_dump_to=/tmp/dump"
+from repro.launch.mesh import ASYNC_COLLECTIVE_FLAGS, set_backend_flags
+merged = set_backend_flags(async_collectives=True, host_device_count=4)
+assert merged == os.environ["XLA_FLAGS"], "return value != env var"
+toks = merged.split()
+assert toks[0] == "--xla_dump_to=/tmp/dump", toks
+for f in ASYNC_COLLECTIVE_FLAGS:
+    assert f in toks, f
+assert "--xla_force_host_platform_device_count=4" in toks
+print("OK")
+""")
+    assert "OK" in out
+
+
+def test_user_spelled_flag_wins():
+    # the user pinned one of our flags to a different value: keep theirs,
+    # never emit a duplicate name (XLA would take the last occurrence)
+    out = _run("""
+import os
+user = "--xla_gpu_enable_latency_hiding_scheduler=false"
+os.environ["XLA_FLAGS"] = user
+from repro.launch.mesh import set_backend_flags
+merged = set_backend_flags(async_collectives=True)
+names = [f.split("=", 1)[0] for f in merged.split()]
+assert names.count("--xla_gpu_enable_latency_hiding_scheduler") == 1
+assert user in merged.split()
+print("OK")
+""")
+    assert "OK" in out
+
+
+def test_flags_actually_reach_backend_before_init():
+    # the dry-run ordering contract: flags set pre-init take effect —
+    # observable via the fake host device count
+    out = _run("""
+from repro.launch.mesh import set_backend_flags
+set_backend_flags(async_collectives=True, host_device_count=6)
+import jax
+assert jax.device_count() == 6, jax.device_count()
+print("OK")
+""")
+    assert "OK" in out
+
+
+def test_noop_returns_none_without_work():
+    out = _run("""
+import os
+from repro.launch.mesh import set_backend_flags
+assert set_backend_flags(async_collectives=False) is None
+assert "XLA_FLAGS" not in os.environ
+print("OK")
+""")
+    assert "OK" in out
+
+
+def test_warn_noop_after_backend_init():
+    import jax
+    from repro.launch.mesh import backend_initialized, set_backend_flags
+
+    jax.devices()                               # force backend init
+    assert backend_initialized()
+    before = os.environ.get("XLA_FLAGS")
+    with pytest.warns(RuntimeWarning, match="already locked in"):
+        got = set_backend_flags(async_collectives=True)
+    assert got is None
+    assert os.environ.get("XLA_FLAGS") == before, \
+        "post-init call must not touch XLA_FLAGS"
+
+
+def test_no_warning_pre_init_paths_are_silent():
+    # subprocess pre-init call must NOT warn (warning is the post-init
+    # signal only)
+    out = _run("""
+import warnings
+with warnings.catch_warnings():
+    warnings.simplefilter("error")
+    from repro.launch.mesh import set_backend_flags
+    set_backend_flags(async_collectives=True)
+print("OK")
+""")
+    assert "OK" in out

@@ -728,14 +728,15 @@ data = SyntheticTokens(DataConfig(vocab=cfg.vocab, seq_len=32,
                                   batch_per_node=2, num_nodes=4))
 probe = data.batch(0, probe=True)
 
-def make(obs=None, async_cfg=None, sharded=False):
+def make(obs=None, async_cfg=None, sharded=False, pipe=1):
     return ConsensusTrainer(
         model, mesh, adamw=AdamWConfig(lr=1e-2),
         consensus=ConsensusConfig(
             penalty=PenaltyConfig(scheme="nap", eta0=0.1),
             topology="ring", local_steps=1,
             dyn_topology=TopologyConfig(),
-            async_exec=async_cfg, shard_consensus=sharded, obs=obs))
+            async_exec=async_cfg, shard_consensus=sharded,
+            pipeline_offsets=pipe, obs=obs))
 
 # --- 1. obs off leaves ZERO footprint: byte-identical HLO ---------------
 hlo = {}
@@ -762,7 +763,8 @@ out["hlo_enabled_has_ring_write"] = (
 
 # --- 2. ring under the REAL jitted step fns (donation path) -------------
 results = {}
-for tag, kw in (("sync", {}), ("sharded", {"sharded": True})):
+for tag, kw in (("sync", {}), ("sharded", {"sharded": True}),
+                ("pipelined", {"pipe": 4})):
     tr = make(obs=ObsConfig(ring_capacity=8), **kw)
     st = tr.init_state(jax.random.PRNGKey(0))
     train, cons = tr.jit_step_fns()
@@ -770,12 +772,12 @@ for tag, kw in (("sync", {}), ("sharded", {"sharded": True})):
         st, m = train(st, data.batch(s))        # the stamped steps differ
         st, m = cons(st, data.batch(s, probe=True))
     rows, cursor, dropped = ring_lib.drain_rows(st.ring, 0)
-    results[tag] = (rows, m)
     out[f"{tag}_ring_rows"] = len(rows)
     out[f"{tag}_ring_dropped"] = dropped
     out[f"{tag}_ring_steps"] = [r["step"] for r in rows]
     out[f"{tag}_keys"] = sorted(m)
     nrows, _, ndropped = node_ring_lib.drain_node_rows(st.node_ring, 0)
+    results[tag] = (rows, m, nrows)
     out[f"{tag}_node_rows"] = len(nrows)
     out[f"{tag}_node_dropped"] = ndropped
     out[f"{tag}_node_steps"] = [r["step"] for r in nrows]
@@ -790,6 +792,13 @@ for tag, kw in (("sync", {}), ("sharded", {"sharded": True})):
 out["node_sync_sharded_r_close"] = bool(np.allclose(
     np.asarray(out["sync_node_r"]), np.asarray(out["sharded_node_r"]),
     rtol=1e-2, atol=1e-3))
+# round-pipeline pin: pipelining is a pure reordering, so the node ring's
+# telemetry — wire_rx accounting included — is EXACTLY the sequential
+# engine's, row for row
+out["node_pipelined_rows_equal_sync"] = (
+    results["pipelined"][2] == results["sync"][2])
+out["ring_pipelined_rows_equal_sync"] = (
+    results["pipelined"][0] == results["sync"][0])
 
 # --- 3. async executor rounds append too, same key set ------------------
 tra = make(obs=ObsConfig(ring_capacity=8),
@@ -898,6 +907,18 @@ def test_node_ring_appends_on_every_engine(engine_results):
     assert all(v in (0.0, 1.0)
                for v in engine_results["async_node_advance"])
     assert engine_results["async_node_ages_ok"] is True
+
+
+def test_node_ring_unchanged_under_pipelining(engine_results):
+    """Round-pipeline satellite pin: with ``pipeline_offsets=4`` the node
+    ring's drained rows — per-node residuals, liveness, and the wire_rx
+    byte accounting — are EXACTLY the sequential engine's (pipelining
+    reorders the schedule, never the values or the telemetry), and the
+    scalar ring matches row for row too."""
+    assert engine_results["node_pipelined_rows_equal_sync"] is True
+    assert engine_results["ring_pipelined_rows_equal_sync"] is True
+    assert engine_results["pipelined_node_rows"] == 3
+    assert all(v > 0 for v in engine_results["pipelined_node_rx"])
 
 
 def test_node_residuals_sharded_equals_replicated(engine_results):
